@@ -1,0 +1,51 @@
+"""Shared benchmark utilities.
+
+The container is CPU-only, so wall-clock numbers are CPU-XLA timings of the
+*algorithms* (fused online-softmax vs unfused naive) — they demonstrate the
+paper's I/O argument qualitatively. The quantitative per-cell TPU numbers come
+from the dry-run roofline artifacts (benchmarks/roofline_report.py).
+
+Each benchmark prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time (µs) of a jitted callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def mha_flops(b, h, sq, skv, d, *, causal: bool) -> float:
+    """2 matmuls (QKᵀ + PV), halved for causal — the paper's TFLOPs metric."""
+    f = 4.0 * b * h * sq * skv * d
+    return f / 2 if causal else f
+
+
+def mha_hbm_bytes(b, h, hkv, sq, skv, d, *, fused: bool, dtype_bytes=2):
+    """The paper's I/O accounting (§2.3 / §3.2): unfused reads/writes S and P
+    (5 reads + 3 writes of N² and N·d tensors); fused reads Q,K,V once and
+    writes O once (3 reads + 1 write)."""
+    qkv = (b * h * sq * d + 2 * b * hkv * skv * d) * dtype_bytes
+    o = b * h * sq * d * dtype_bytes
+    if fused:
+        return qkv + o                      # 3 reads + 1 write
+    s_mat = b * h * sq * skv * dtype_bytes  # S and P round-trips
+    return qkv + o + 2 * s_mat + 2 * s_mat  # write S, read S, write P, read P
+
+
+def row(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")

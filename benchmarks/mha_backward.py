@@ -1,0 +1,62 @@
+"""Paper Figure 11: MHA-Backward — fused recompute backward vs naive autodiff.
+
+The fused path stores only (O, LSE) and recomputes S/P in the backward (the
+paper's memory-saving design); the naive path lets autodiff save the N²
+attention matrix. We report wall-µs and the residual-memory ratio.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import mha_flops, row, time_fn
+from repro.kernels.ops import mha_reference, mha_xla, AttnConfig
+
+HIDDEN = 256
+TOKEN_BUDGET = 2048
+
+
+def run(head_dim: int = 64, causal: bool = False):
+    heads = HIDDEN // head_dim
+    for seq in (512, 1024, 2048):
+        batch = max(1, TOKEN_BUDGET // seq)
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        q = jax.random.normal(ks[0], (batch, heads, seq, head_dim))
+        k = jax.random.normal(ks[1], (batch, heads, seq, head_dim))
+        v = jax.random.normal(ks[2], (batch, heads, seq, head_dim))
+        do = jax.random.normal(ks[3], (batch, heads, seq, head_dim))
+        cfg = AttnConfig(causal=causal)
+
+        def loss_fused(q, k, v):
+            return jnp.vdot(mha_xla(q, k, v, config=cfg,
+                                    chunk=min(512, seq)), do)
+
+        def loss_naive(q, k, v):
+            return jnp.vdot(mha_reference(q, k, v, config=cfg), do)
+
+        gf = jax.jit(jax.grad(loss_fused, argnums=(0, 1, 2)))
+        gn = jax.jit(jax.grad(loss_naive, argnums=(0, 1, 2)))
+        us_f = time_fn(gf, q, k, v)
+        us_n = time_fn(gn, q, k, v)
+        # residual memory: naive saves P [B,H,S,S]; fused saves lse [B,H,S]
+        res_naive = batch * heads * seq * seq * 4
+        res_fused = batch * heads * seq * 4 * 2
+        fl = 2.5 * mha_flops(batch, heads, seq, seq, head_dim, causal=causal)
+        tag = f"hd{head_dim}_causal{int(causal)}_seq{seq}"
+        row(f"mha_bwd_fused_{tag}", us_f,
+            f"speedup={us_n/us_f:.2f}x;residual_mem_reduction="
+            f"{res_naive/res_fused:.0f}x;gflops={fl/us_f/1e3:.1f}")
+        row(f"mha_bwd_naive_{tag}", us_n, f"gflops={fl/us_n/1e3:.1f}")
+
+
+def main():
+    for hd in (64, 128):
+        run(head_dim=hd, causal=False)
+    run(head_dim=64, causal=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Paper Figure 10: MHA-Forward — fused vs unfused, sweeping sequence length.
+
+Paper setting: hidden 2048, head_dim ∈ {64, 128}, heads = 2048/head_dim,
+batch = 16384/seq, seq ∈ {512..16384}, causal ∈ {False, True}, dropout 0.1.
+We run a CPU-scaled version of the same sweep (hidden 256, batch scaled) and
+report: wall-µs for fused (online) vs naive, the derived HBM-byte ratio on the
+paper's I/O model, and achieved GFLOP/s.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import mha_flops, mha_hbm_bytes, row, time_fn
+from repro.kernels.ops import mha_reference, mha_xla, AttnConfig
+
+HIDDEN = 256
+TOKEN_BUDGET = 4096
+
+
+def run(head_dim: int = 64, causal: bool = False, dropout: float = 0.1):
+    heads = HIDDEN // head_dim
+    results = []
+    for seq in (512, 1024, 2048, 4096):
+        batch = max(1, TOKEN_BUDGET // seq)
+        key = jax.random.PRNGKey(0)
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (batch, heads, seq, head_dim))
+        k = jax.random.normal(ks[1], (batch, heads, seq, head_dim))
+        v = jax.random.normal(ks[2], (batch, heads, seq, head_dim))
+        cfg = AttnConfig(causal=causal, dropout_rate=dropout)
+
+        fused = jax.jit(functools.partial(mha_xla, config=cfg,
+                                          chunk=min(512, seq)))
+        naive = jax.jit(functools.partial(mha_reference, config=cfg))
+        us_f = time_fn(fused, q, k, v)
+        us_n = time_fn(naive, q, k, v)
+        fl = mha_flops(batch, heads, seq, seq, head_dim, causal=causal)
+        io_f = mha_hbm_bytes(batch, heads, heads, seq, seq, head_dim, fused=True)
+        io_n = mha_hbm_bytes(batch, heads, heads, seq, seq, head_dim, fused=False)
+        tag = f"hd{head_dim}_causal{int(causal)}_seq{seq}"
+        row(f"mha_fwd_fused_{tag}", us_f,
+            f"speedup={us_n/us_f:.2f}x;io_reduction={io_n/io_f:.1f}x;"
+            f"gflops={fl/us_f/1e3:.1f}")
+        row(f"mha_fwd_naive_{tag}", us_n, f"gflops={fl/us_n/1e3:.1f}")
+        results.append((seq, us_f, us_n, io_n / io_f))
+    return results
+
+
+def main():
+    for hd in (64, 128):
+        for causal in (False, True):
+            run(head_dim=hd, causal=causal)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Aggregate the dry-run artifacts into the EXPERIMENTS.md roofline table.
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and prints:
+  * the per-cell three-term roofline table (single-pod),
+  * the dominant bottleneck + one-line 'what would move it',
+  * the multi-pod compile matrix,
+  * hillclimb-candidate ranking (worst MFU / most collective-bound).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "artifacts", "dryrun")
+
+MOVE_HINTS = {
+    "compute": "raise per-chip arithmetic intensity: larger per-device batch, "
+               "bf16-ACC matmuls, fewer remat recomputes",
+    "memory": "cut HBM traffic: fuse optimizer update, shard weights further "
+              "(FSDP), reduce logits round-trips, bigger attention blocks",
+    "collective": "reshape sharding: less TP for small models (SP all-gathers "
+                  "dominate), reduce-scatter instead of all-reduce, int8 "
+                  "gradient compression, overlap with compute",
+}
+
+
+def load(mesh="16x16", tag=""):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(ART_DIR, f"*__{mesh}{tag}.json"))):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def fmt_table(rows):
+    out = []
+    hdr = (f"{'arch':22s} {'shape':12s} {'C(ms)':>8s} {'M(ms)':>8s} "
+           f"{'X(ms)':>8s} {'bound':>10s} {'MFU%':>6s} {'useful':>6s} "
+           f"{'mem/dev':>8s} {'fits':>5s}")
+    out.append(hdr)
+    out.append("-" * len(hdr))
+    for r in rows:
+        if r.get("skipped"):
+            out.append(f"{r['arch']:22s} {r['shape']:12s} "
+                       f"SKIP: {r['reason']}")
+            continue
+        if "error" in r:
+            out.append(f"{r['arch']:22s} {r['shape']:12s} "
+                       f"ERROR: {r['error'][:80]}")
+            continue
+        rf = r["roofline"]
+        m = r["memory"]
+        # fits_analytic (storage model) is authoritative when present: the
+        # CPU scheduler's temp numbers overstate TPU residency (no donation
+        # aliasing, different fusion/liveness)
+        if "storage_analytic" in m:
+            mem_gb = m["storage_analytic"]["total"] / 1e9
+            fits = m["fits_analytic"]
+        else:
+            mem_gb = m["peak_estimate_bytes"] / 1e9
+            fits = m["fits"]
+        out.append(
+            f"{r['arch']:22s} {r['shape']:12s} "
+            f"{rf['compute_s']*1e3:8.1f} {rf['memory_s']*1e3:8.1f} "
+            f"{rf['collective_s']*1e3:8.1f} {rf['bound']:>10s} "
+            f"{rf['mfu']*100:6.1f} {rf['useful_compute_ratio']:6.2f} "
+            f"{mem_gb:7.2f}G "
+            f"{'yes' if fits else 'NO':>5s}")
+    return "\n".join(out)
+
+
+def _dir_rows(dirname, mesh="16x16"):
+    import glob as g
+    base = os.path.join(os.path.dirname(ART_DIR), dirname)
+    rows = {}
+    for f in sorted(g.glob(os.path.join(base, f"*__{mesh}.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        if "roofline" in r:
+            rows[(r["arch"], r["shape"])] = r
+    return rows
+
+
+def evolution_table():
+    """v0 (paper-faithful baseline) → v1 (bug fixes) → v2 (optimized)."""
+    dirs = [("v0", "dryrun_baseline"), ("v1", "dryrun_v1"), ("v2", "dryrun")]
+    tables = [(tag, _dir_rows(d)) for tag, d in dirs
+              if os.path.isdir(os.path.join(os.path.dirname(ART_DIR), d))]
+    if len(tables) < 2:
+        return
+    print("== Perf evolution: step-time roofline (ms) and MFU per version ==")
+    keys = sorted(set().union(*[t.keys() for _, t in tables]))
+    hdr = f"{'cell':36s}" + "".join(f" {tag+'(ms)':>10s} {tag+'%':>6s}"
+                                    for tag, _ in tables)
+    print(hdr)
+    for k in keys:
+        line = f"{k[0]+' '+k[1]:36s}"
+        for _, t in tables:
+            r = t.get(k)
+            if r:
+                rf = r["roofline"]
+                line += f" {rf['step_time_s']*1e3:10.1f} {rf['mfu']*100:6.1f}"
+            else:
+                line += f" {'-':>10s} {'-':>6s}"
+        print(line)
+    print()
+
+
+def main():
+    rows = load("16x16")
+    print("== Roofline (single-pod 16x16, 256 chips) ==")
+    print(fmt_table(rows))
+    print()
+    evolution_table()
+    ok = [r for r in rows if "roofline" in r]
+    if ok:
+        print("== Bottleneck hints ==")
+        for r in ok:
+            rf = r["roofline"]
+            print(f"{r['arch']:22s} {r['shape']:12s} {rf['bound']:>10s}: "
+                  f"{MOVE_HINTS[rf['bound']]}")
+        print()
+        print("== Hillclimb candidates ==")
+        worst = sorted(ok, key=lambda r: r["roofline"]["mfu"])[:3]
+        coll = sorted(ok, key=lambda r: -r["roofline"]["collective_s"])[:3]
+        print("worst MFU:", [(r["arch"], r["shape"],
+                              f"{r['roofline']['mfu']*100:.1f}%")
+                             for r in worst])
+        print("most collective-bound:",
+              [(r["arch"], r["shape"],
+                f"{r['roofline']['collective_s']*1e3:.0f}ms") for r in coll])
+    mrows = load("2x16x16")
+    if mrows:
+        print()
+        print("== Multi-pod (2x16x16, 512 chips) compile matrix ==")
+        for r in mrows:
+            status = ("SKIP" if r.get("skipped")
+                      else "FAIL" if "error" in r else "OK")
+            extra = ""
+            if status == "OK":
+                extra = (f"compile={r['compile_s']:.0f}s "
+                         f"mem/dev={r['memory']['peak_estimate_bytes']/1e9:.2f}G")
+            print(f"{status:5s} {r['arch']:22s} {r['shape']:12s} {extra}")
+
+
+if __name__ == "__main__":
+    main()

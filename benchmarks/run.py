@@ -1,0 +1,36 @@
+"""Benchmark driver: one section per paper table/figure + the roofline report.
+
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (accuracy, end_to_end, io_counts, mha_backward,
+                            mha_forward, roofline_report)
+    sections = [
+        ("Fig.10 MHA-Forward (fused vs unfused)", mha_forward.main),
+        ("Fig.11 MHA-Backward (recompute vs autodiff)", mha_backward.main),
+        ("S4.2.3 Accuracy (bf16-ACC / f32-ACC vs f32 oracle)", accuracy.main),
+        ("S2.3 HBM I/O counts (5R+3W vs 3R+1W)", io_counts.main),
+        ("Fig.12 End-to-End encoder layer", end_to_end.main),
+        ("Roofline report (dry-run artifacts)", roofline_report.main),
+    ]
+    failures = 0
+    for title, fn in sections:
+        print(f"\n# === {title} ===")
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Serving example: batched prefill + autoregressive decode with KV cache.
+
+Exercises the flash-decode path (ragged batch lengths, GQA-packed MXU rows)
+end to end with greedy sampling, and verifies the generation is identical to
+teacher-forcing the same tokens through the full forward pass.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import lm
+from repro.models.layers import Ctx
+from repro.runtime.steps import make_serve_steps
+
+cfg = dataclasses.replace(configs.smoke_config("qwen3_14b"),
+                          dtype=jnp.float32, remat=False)
+B, PROMPT, GEN = 2, 48, 24
+arts = make_serve_steps(cfg, impl="xla", max_len=PROMPT + GEN, batch=B,
+                        xla_chunk=16)
+params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
+prompt = jax.random.randint(jax.random.PRNGKey(1), (B, PROMPT), 0,
+                            cfg.vocab_size)
+
+caches = arts.cache_init_fn()
+logits, caches = arts.prefill_fn(params, prompt, None, caches)
+tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)
+generated = [np.asarray(tok)]
+for i in range(GEN - 1):
+    logits, caches = arts.decode_fn(params, tok, caches, jnp.int32(PROMPT + i))
+    tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)
+    generated.append(np.asarray(tok))
+gen = np.stack(generated, axis=1)
+print("generated tokens (row 0):", gen[0])
+
+# verification: teacher-force the generated sequence; argmax must reproduce it
+full = jnp.concatenate([prompt, jnp.asarray(gen)], axis=1)
+logits_full, _, _ = lm.forward(cfg, params, Ctx(impl="xla", xla_chunk=16),
+                               tokens=full)
+pred = np.asarray(jnp.argmax(logits_full[:, :, :cfg.vocab_size], axis=-1))
+match = (pred[:, PROMPT - 1:-1] == gen).mean()
+print(f"teacher-forcing agreement: {match*100:.1f}% (expect 100%)")
+assert match == 1.0

@@ -1,0 +1,3 @@
+from repro.checkpoint.ckpt import latest_step, restore, save, save_async
+
+__all__ = ["latest_step", "restore", "save", "save_async"]

@@ -1,0 +1,174 @@
+"""Architecture configs (assigned pool) + input-shape registry.
+
+Every arch is selectable via ``--arch <id>``; ``smoke_config(id)`` returns the
+reduced same-family variant used by CPU smoke tests. The FULL configs are only
+ever lowered via ShapeDtypeStructs in the dry-run (never allocated).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    group_size: int = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_rnn: int
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_inner: int
+    ssm_state: int = 16
+    conv_kernel: int = 4
+    dt_rank: int = 0  # 0 → ceil(d_model/16)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | encoder | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 → d_model // num_heads
+    qk_norm: bool = False
+    causal: bool = True
+    attn_window: Optional[int] = None
+    block_pattern: Tuple[str, ...] = ("attn",)   # cycled over layers
+    moe: Optional[MoEConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    mamba: Optional[MambaConfig] = None
+    frontend: Optional[str] = None   # vision | audio (stub: embeds in, not ids)
+    mlp_type: str = "gated_silu"
+    dropout_rate: float = 0.0
+    dtype: Any = jnp.bfloat16
+    fsdp: bool = False               # shard params over data axis too (ZeRO-3)
+    sharding_profile: str = "tp_sp"  # "tp_sp": TP over model + sequence-
+                                     #   parallel residuals (Megatron-style)
+                                     # "fsdp": no TP — batch and params shard
+                                     #   over (data×model) jointly (ZeRO-3);
+                                     #   collective traffic scales with
+                                     #   weights, not activations
+    ctx_parallel_attn: bool = False  # shard attention *queries* over the
+                                     # model axis when heads don't divide it
+                                     # (context parallelism — removes the
+                                     # 16× attention-compute replication)
+    remat: bool = True
+    scan_layers: bool = True         # False: unroll the layer stack (used by
+                                     # the dry-run cost pass — XLA cost
+                                     # analysis counts scan bodies once)
+    sub_quadratic: bool = False      # eligible for long_500k decode
+    notes: str = ""
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.mamba is not None and self.mamba.dt_rank == 0:
+            object.__setattr__(self, "mamba", dataclasses.replace(
+                self.mamba, dt_rank=-(-self.d_model // 16)))
+
+    @property
+    def has_decode(self) -> bool:
+        return self.causal  # encoder-only archs have no autoregressive step
+
+    def param_count(self) -> int:
+        """Approximate N for MODEL_FLOPS (embedding included once)."""
+        d, L = self.d_model, self.num_layers
+        n = self.vocab_size * d * 2  # embed + head (untied)
+        att = d * self.num_heads * self.head_dim * 2 \
+            + d * self.num_kv_heads * self.head_dim * 2
+        mlp = 3 * d * self.d_ff if self.mlp_type == "gated_silu" \
+            else 2 * d * self.d_ff
+        if self.moe:
+            m = self.moe
+            mlp = m.num_experts * 3 * d * m.d_ff_expert + d * m.num_experts \
+                + m.num_shared_experts * 3 * d * m.d_ff_expert
+        rec = 0
+        if self.rglru:
+            dr = self.rglru.d_rnn
+            rec = 3 * d * dr + 2 * dr * dr + 4 * dr
+        if self.mamba:
+            mc = self.mamba
+            rec = 3 * d * mc.d_inner + mc.d_inner * (
+                2 * mc.ssm_state + 2 * mc.dt_rank + mc.ssm_state)
+        total = 0
+        for i in range(L):
+            kind = self.block_pattern[i % len(self.block_pattern)]
+            total += {"attn": att + mlp, "rec": rec + mlp,
+                      "ssm": rec}[kind] + 2 * d
+        return n + total
+
+    def active_param_count(self) -> int:
+        """N_active for MoE MODEL_FLOPS."""
+        if not self.moe:
+            return self.param_count()
+        m = self.moe
+        d, L = self.d_model, self.num_layers
+        att = d * self.num_heads * self.head_dim * 2 \
+            + d * self.num_kv_heads * self.head_dim * 2
+        mlp_active = (m.top_k + m.num_shared_experts) * 3 * d * m.d_ff_expert
+        return (self.vocab_size * d * 2
+                + L * (att + mlp_active + d * m.num_experts + 2 * d))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str        # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+ARCHS = [
+    "llava_next_34b", "granite_3_2b", "qwen3_14b", "deepseek_67b",
+    "deepseek_coder_33b", "hubert_xlarge", "dbrx_132b", "deepseek_moe_16b",
+    "recurrentgemma_2b", "falcon_mamba_7b",
+]
+
+
+def get_config(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{name.replace('-', '_')}")
+    return mod.CONFIG
+
+
+def smoke_config(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{name.replace('-', '_')}")
+    return mod.SMOKE
+
+
+def cells(arch: ArchConfig):
+    """The (shape → runnable?) map for one arch, with skip reasons."""
+    out = {}
+    for sname, sh in SHAPES.items():
+        if sh.kind == "decode" and not arch.has_decode:
+            out[sname] = (False, "encoder-only: no autoregressive decode step")
+        elif sname == "long_500k" and not arch.sub_quadratic:
+            out[sname] = (False, "pure full-attention arch: 500k decode "
+                                 "assigned to SSM/hybrid archs only")
+        else:
+            out[sname] = (True, "")
+    return out

@@ -1,0 +1,20 @@
+"""deepseek-67b — assigned architecture config (see configs/__init__ for fields)."""
+
+import dataclasses
+
+from repro.configs import ArchConfig, MoEConfig, RGLRUConfig, MambaConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-67b", family="dense",
+    num_layers=95, d_model=8192, num_heads=64, num_kv_heads=8,
+    d_ff=22016, vocab_size=102400,
+    fsdp=True,
+    sharding_profile="fsdp",  # TP-SP is 8x collective-bound at train_4k;
+                               # ZeRO-3 profile: 45.6s->15.9s collective,
+                               # MFU 18.5%->52.8% (SSPerf iteration 2)
+    notes="llama-arch dense 67B [arXiv:2401.02954; hf]. FSDP+SP required: "
+          "95 layers x 1GB residuals do not fit without both.",
+)
+SMOKE = dataclasses.replace(
+    CONFIG, num_layers=3, d_model=64, num_heads=4, num_kv_heads=2,
+    d_ff=128, vocab_size=256, head_dim=0, fsdp=False)

@@ -1,0 +1,17 @@
+"""deepseek-coder-33b — assigned architecture config (see configs/__init__ for fields)."""
+
+import dataclasses
+
+from repro.configs import ArchConfig, MoEConfig, RGLRUConfig, MambaConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-coder-33b", family="dense",
+    num_layers=62, d_model=7168, num_heads=56, num_kv_heads=8,
+    d_ff=19200, vocab_size=32256,
+    fsdp=True,
+    ctx_parallel_attn=True,  # 56 heads vs 16-way axis (SSPerf iteration 4)
+    notes="llama-arch dense 33B [arXiv:2401.14196; hf]",
+)
+SMOKE = dataclasses.replace(
+    CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    d_ff=128, vocab_size=256, head_dim=0, fsdp=False)

@@ -1,0 +1,20 @@
+"""granite-3-2b — assigned architecture config (see configs/__init__ for fields)."""
+
+import dataclasses
+
+from repro.configs import ArchConfig, MoEConfig, RGLRUConfig, MambaConfig
+
+CONFIG = ArchConfig(
+    name="granite-3-2b", family="dense",
+    num_layers=40, d_model=2048, num_heads=32, num_kv_heads=8,
+    d_ff=8192, vocab_size=49155,
+    sharding_profile="fsdp",  # TP-SP activation comm dominates a 2B model:
+                              # collective 3.09s->0.61s, MFU 10.6%->54.2%
+                              # (EXPERIMENTS SSPerf iteration 6)
+    notes="GQA dense decoder [hf:ibm-granite/granite-3.0-2b-base; hf]. "
+          "vocab 49155 is padded to a multiple of the model axis by the "
+          "sharding rules.",
+)
+SMOKE = dataclasses.replace(
+    CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    d_ff=128, vocab_size=251, head_dim=0)

@@ -1,0 +1,21 @@
+"""llava-next-34b — assigned architecture config (see configs/__init__ for fields)."""
+
+import dataclasses
+
+from repro.configs import ArchConfig, MoEConfig, RGLRUConfig, MambaConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-34b", family="vlm",
+    num_layers=60, d_model=7168, num_heads=56, num_kv_heads=8,
+    d_ff=20480, vocab_size=64000,
+    frontend="vision",   # anyres patch embeddings provided by the stub frontend
+    fsdp=True,
+    ctx_parallel_attn=True,  # 56 heads do not divide the 16-way model axis
+                             # (+8x prefill compute - EXPERIMENTS SSPerf it.4)
+    notes="decoder LM backbone of LLaVA-NeXT-34B (anyres tiling handled by the "
+          "vision stub; input_specs() provides precomputed patch embeddings) "
+          "[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]",
+)
+SMOKE = dataclasses.replace(
+    CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    d_ff=128, vocab_size=256, head_dim=0, fsdp=False)

@@ -1,0 +1,21 @@
+"""qwen3-14b — assigned architecture config (see configs/__init__ for fields)."""
+
+import dataclasses
+
+from repro.configs import ArchConfig, MoEConfig, RGLRUConfig, MambaConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-14b", family="dense",
+    num_layers=40, d_model=5120, num_heads=40, num_kv_heads=8,
+    d_ff=17408, vocab_size=151936, head_dim=128,
+    qk_norm=True,
+    fsdp=True,
+    ctx_parallel_attn=True,  # 40 heads vs 16-way axis (SSPerf iteration 4)
+    notes="qk-norm + GQA [hf:Qwen/Qwen3-8B; hf]. fsdp=True: 40 heads do not "
+          "divide the 16-way model axis, so attention projections cannot TP "
+          "- without FSDP they (and their optimizer state) replicate to "
+          "46 GB/device (caught by the v0 dry-run, EXPERIMENTS.md S2).",
+)
+SMOKE = dataclasses.replace(
+    CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    d_ff=128, vocab_size=256, head_dim=16)

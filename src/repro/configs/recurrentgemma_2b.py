@@ -1,0 +1,23 @@
+"""recurrentgemma-2b — assigned architecture config (see configs/__init__ for fields)."""
+
+import dataclasses
+
+from repro.configs import ArchConfig, MoEConfig, RGLRUConfig, MambaConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-2b", family="hybrid",
+    num_layers=26, d_model=2560, num_heads=10, num_kv_heads=1,
+    d_ff=7680, vocab_size=256000, head_dim=256,
+    attn_window=2048,                      # local attention
+    block_pattern=("rec", "rec", "attn"),  # Griffin 2:1 pattern
+    rglru=RGLRUConfig(d_rnn=2560),
+    sub_quadratic=True,
+    ctx_parallel_attn=True,  # 10 heads vs 16-way axis
+    notes="RG-LRU + local attn 1:2 [arXiv:2402.19427; hf]. 10 heads do not "
+          "divide the 16-way model axis -> attention params replicated, "
+          "activations batch-sharded (sharding-rule fallback).",
+)
+SMOKE = dataclasses.replace(
+    CONFIG, num_layers=3, d_model=64, num_heads=2, num_kv_heads=1,
+    d_ff=128, vocab_size=256, head_dim=32, attn_window=32,
+    rglru=RGLRUConfig(d_rnn=64))

@@ -1,0 +1,84 @@
+"""SparkAttention public API — the paper's contribution as a composable module.
+
+One entry point, three interchangeable execution paths:
+
+* ``impl="pallas"``            — the fused Pallas TPU kernels (production path).
+* ``impl="pallas_interpret"``  — same kernels, interpret mode (CPU validation).
+* ``impl="xla"``               — the identical online-softmax algorithm as a
+                                 chunked ``lax.scan`` in plain XLA; O(N) memory.
+                                 Used by the CPU dry-run so lowered HLO matches
+                                 the kernel algorithm's memory profile.
+* ``impl="naive"``             — the unfused baseline (paper's PyTorch/cuBLAS
+                                 comparison point). O(N²) memory.
+
+All paths are numerically interchangeable (tests assert it) and differentiable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.ops import AttnConfig
+
+IMPLS = ("pallas", "pallas_interpret", "xla", "naive")
+
+
+def spark_attention(q, k, v, *, impl: str = "xla", seed=0,
+                    causal: bool = False, window: Optional[int] = None,
+                    scale: Optional[float] = None, dropout_rate: float = 0.0,
+                    acc_dtype=jnp.float32, bwd_acc_dtype=jnp.float32,
+                    block_q: int = 128, block_kv: int = 128,
+                    xla_chunk: int = 1024, xla_unroll: bool = False):
+    """Fused MHA. q [B,Hq,Sq,D], k/v [B,Hkv,Skv,D] → [B,Hq,Sq,D]."""
+    if impl not in IMPLS:
+        raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
+    cfg = AttnConfig(causal=causal, window=window, scale=scale,
+                     dropout_rate=dropout_rate, acc_dtype=acc_dtype,
+                     bwd_acc_dtype=bwd_acc_dtype, block_q=block_q,
+                     block_kv=block_kv, interpret=(impl == "pallas_interpret"))
+    if impl in ("pallas", "pallas_interpret"):
+        return ops.mha(q, k, v, seed=seed, config=cfg)
+    if impl == "xla":
+        return ops.mha_xla(q, k, v, seed=seed, config=cfg, chunk=xla_chunk,
+                           unroll=xla_unroll)
+    return ops.mha_reference(q, k, v, seed=seed, config=cfg)
+
+
+def spark_decode(q, k, v, *, impl: str = "xla", kv_len=None,
+                 window: Optional[int] = None, scale: Optional[float] = None,
+                 block_kv: int = 512):
+    """Single-token decode against a KV cache. q [B,Hq,D] → [B,Hq,D]."""
+    if impl in ("pallas", "pallas_interpret"):
+        return ops.decode(q, k, v, kv_len=kv_len, window=window, scale=scale,
+                          block_kv=block_kv, interpret=(impl == "pallas_interpret"))
+    # XLA path: a single query row — the score vector is [B,H,S] (same order of
+    # memory as one KV head slice), so the direct masked form is already I/O
+    # optimal for decode.
+    return _xla_masked_decode(q, k, v, kv_len=kv_len, window=window, scale=scale)
+
+
+def _xla_masked_decode(q, k, v, *, kv_len=None, window=None, scale=None):
+    from repro.core.online_softmax import NEG_INF
+    from repro.kernels.ref import _expand_kv
+    b, hq, d = q.shape
+    skv = k.shape[2]
+    scale = (d ** -0.5) if scale is None else scale
+    kf = _expand_kv(k, hq)
+    vf = _expand_kv(v, hq)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) * scale
+    kp = jnp.arange(skv)[None, None, :]
+    if kv_len is None:
+        kv_len = jnp.full((b,), skv, jnp.int32)
+    L = kv_len[:, None, None]
+    allowed = kp < L
+    if window is not None:
+        allowed &= kp > (L - 1) - window
+    s = jnp.where(allowed, s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhk,bhkd->bhd", p, vf.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,78 @@
+"""Online-softmax state algebra (paper Eq. 2/3, after FA/FA2).
+
+The state of a partially-computed softmax-weighted sum over a row is the triple
+``(m, l, acc)``:
+
+    m   : running row max of the scores seen so far            (f32)
+    l   : running sum of exp(score - m)                        (f32)
+    acc : running sum of exp(score - m) @ V                    (f32)
+
+Two states over disjoint score blocks merge associatively (paper Eq. 3):
+
+    m   = max(m1, m2)
+    l   = e^{m1-m} l1 + e^{m2-m} l2
+    acc = e^{m1-m} acc1 + e^{m2-m} acc2
+
+and the finished row is ``acc / l`` with log-sum-exp ``lse = m + log l``.
+
+These tiny functions are the single source of truth used by:
+  * the Pallas kernels (per kv-block update),
+  * the pure-XLA chunked fallback (lax.scan carry),
+  * the distributed flash-decode merge (cross-device partial combine),
+  * the hypothesis property tests (associativity / shift invariance).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps exp() NaN-free on all paths
+
+
+class SoftmaxState(NamedTuple):
+    m: jnp.ndarray    # [..., rows]         running max
+    l: jnp.ndarray    # [..., rows]         running denominator
+    acc: jnp.ndarray  # [..., rows, d]      running numerator @ V
+
+
+def init_state(rows_shape, d: int, dtype=jnp.float32) -> SoftmaxState:
+    return SoftmaxState(
+        m=jnp.full(rows_shape, NEG_INF, dtype),
+        l=jnp.zeros(rows_shape, dtype),
+        acc=jnp.zeros((*rows_shape, d), dtype),
+    )
+
+
+def update(state: SoftmaxState, s: jnp.ndarray, v: jnp.ndarray) -> SoftmaxState:
+    """Fold one block of scores ``s [..., rows, cols]`` and values ``v [..., cols, d]``."""
+    m_blk = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(state.m, m_blk)
+    alpha = jnp.exp(state.m - m_new)                       # rescale of old state
+    p = jnp.exp(s - m_new[..., None])                      # unnormalised probs
+    l_new = state.l * alpha + jnp.sum(p, axis=-1)
+    acc_new = state.acc * alpha[..., None] + p @ v.astype(p.dtype)
+    return SoftmaxState(m_new, l_new, acc_new)
+
+
+def merge(s1: SoftmaxState, s2: SoftmaxState) -> SoftmaxState:
+    """Associative merge of two disjoint-block states (paper Eq. 3)."""
+    m = jnp.maximum(s1.m, s2.m)
+    a1 = jnp.exp(s1.m - m)
+    a2 = jnp.exp(s2.m - m)
+    return SoftmaxState(
+        m=m,
+        l=s1.l * a1 + s2.l * a2,
+        acc=s1.acc * a1[..., None] + s2.acc * a2[..., None],
+    )
+
+
+def finalize(state: SoftmaxState, out_dtype=None):
+    """Return (o, lse). Rows that saw only masked scores produce zeros."""
+    l_safe = jnp.where(state.l == 0.0, 1.0, state.l)
+    o = state.acc / l_safe[..., None]
+    lse = state.m + jnp.log(l_safe)
+    if out_dtype is not None:
+        o = o.astype(out_dtype)
+    return o, lse

@@ -1,0 +1,4 @@
+from repro.data.synthetic import DataConfig, batch_iterator, make_batch
+from repro.data.loader import PrefetchLoader
+
+__all__ = ["DataConfig", "batch_iterator", "make_batch", "PrefetchLoader"]

@@ -1,0 +1,4 @@
+from repro.distributed.sharding import (ShardingRules, default_rules,
+                                        vocab_pad_for)
+
+__all__ = ["ShardingRules", "default_rules", "vocab_pad_for"]

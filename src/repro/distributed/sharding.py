@@ -1,0 +1,192 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+Params and activations are annotated with *logical* axis names
+(models/layers.py); this module maps them onto mesh axes per architecture and
+records every fallback it takes, so the dry-run can report exactly how each of
+the 10 heterogeneous archs was laid out on the same (pod, data, model) mesh.
+
+Key rules (see DESIGN.md §4):
+  batch        → (pod, data)  [DP]
+  seq          → model        [Megatron-style sequence parallelism between
+                               layers; attention/MLP gather internally]
+  heads/mlp/vocab/experts/rnn → model  [TP/EP], iff divisible, else replicate
+  embed (param dim) → data when cfg.fsdp  [FSDP/ZeRO; gathered per layer]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    mesh: Mesh
+    rules: Dict[str, Any]                 # logical name → mesh axis (or None)
+    fallbacks: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def spec_for(self, logical_axes: Tuple[Optional[str], ...],
+                 shape: Optional[Tuple[int, ...]] = None) -> P:
+        """Map logical axes → PartitionSpec, dropping non-divisible entries."""
+        parts = []
+        for i, name in enumerate(logical_axes):
+            axis = self.rules.get(name) if name else None
+            if axis is None:
+                parts.append(None)
+                continue
+            size = _axis_size(self.mesh, axis)
+            if shape is not None and shape[i] % size != 0:
+                self.fallbacks[f"{name}[{shape[i]}]"] = (
+                    f"not divisible by {axis}={size} → replicated")
+                parts.append(None)
+            else:
+                parts.append(axis)
+        # a mesh axis may appear at most once in a spec
+        seen = set()
+        clean = []
+        for p_ in parts:
+            names = p_ if isinstance(p_, tuple) else (p_,)
+            if p_ is not None and any(n in seen for n in names):
+                clean.append(None)
+            else:
+                clean.append(p_)
+                seen.update(n for n in names if n)
+        return P(*clean)
+
+    def sharding_for(self, logical_axes, shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(logical_axes, shape))
+
+    def constrain(self, x, logical_axes):
+        """Activation sharding constraint (used as Ctx.constrain)."""
+        spec = self.spec_for(tuple(logical_axes), tuple(x.shape))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def tree_shardings(self, params, specs):
+        """NamedSharding pytree for a param pytree + logical-spec pytree."""
+        return jax.tree.map(
+            lambda p, s: self.sharding_for(tuple(s), tuple(p.shape)),
+            params, specs, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        size = 1
+        for a in axis:
+            size *= mesh.shape[a]
+        return size
+    return mesh.shape[axis]
+
+
+def default_rules(mesh: Mesh, cfg, *, serve: bool = False,
+                  decode: bool = False) -> ShardingRules:
+    """Per-arch logical→mesh mapping.
+
+    The same rule set covers train and serve: non-divisible dims (e.g. a
+    decode step's seq=1, or kv_heads=8 on a 16-way model axis) fall back to
+    replication automatically, and the spec builder never assigns one mesh
+    axis twice — so e.g. the KV cache shards over kv_heads when divisible and
+    over cache sequence (distributed flash-decode) otherwise."""
+    dp: Any = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if len(dp) == 1:
+        dp = dp[0]
+    tp = "model" if "model" in mesh.shape else None
+
+    if (cfg is not None and not serve
+            and getattr(cfg, "sharding_profile", "tp_sp") == "fsdp"):
+        return _fsdp_rules(mesh, cfg)  # train-only profile (see above)
+
+    rules: Dict[str, Any] = {
+        # activations
+        "batch": dp,
+        "seq": tp,            # sequence-parallel residuals between layers
+        "seq_full": None,     # inside attention: per-device full seq
+        "heads": tp,
+        "kv_heads": tp,
+        "head_dim": None,
+        "moe_groups": dp,
+        # params
+        "vocab": tp,
+        "embed": None,
+        "mlp": tp,
+        "expert_mlp": None,   # per-expert FFN dim stays local (E is sharded)
+        "q_proj": tp,
+        "kv_proj": tp,
+        "experts": tp,
+        "rnn": tp,
+        "state": None,
+        "layers": None,       # stacked-scan leading dim
+        "kv_cache_seq": tp,   # long-KV decode: cache seq sharded when kv_heads
+                              # can't be (spec builder enforces axis uniqueness)
+    }
+    if cfg is not None and getattr(cfg, "fsdp", False) and not decode:
+        # FSDP: weights gathered per layer inside scan. Train + prefill only
+        # (both have whole-sequence compute to overlap the gathers); per-token
+        # weight all-gathers would dominate decode (qwen3 decode went
+        # 6ms→146ms when FSDP leaked into decode rules — §Perf iteration 3).
+        rules["embed"] = "data"
+    if decode and cfg is not None and cfg.num_kv_heads \
+            and cfg.num_kv_heads % _axis_size(mesh, tp) != 0:
+        # Distributed flash-decode: the cache is seq-sharded (kv_heads can't
+        # shard). If q stayed heads-sharded, GSPMD must all-gather the WHOLE
+        # cache every token (190 GB/token for deepseek-67b — §Perf iteration
+        # 3). Replicating the q *activation* instead (weights stay sharded)
+        # lets GSPMD emit the online-softmax partial merge: per-shard local
+        # attention + tiny [b,h]/[b,h,d] all-reduces.
+        rules["heads"] = None
+        # Projection WEIGHTS shard on the fused (heads·head_dim) dim — always
+        # divisible even when the head count isn't. The resulting activation
+        # gather is one [B,1,H·D] row per token (KBs); without this, decode
+        # replicated q/k/v/o projections (+24 GB/dev on llava — §Perf it. 3).
+        rules["q_proj"] = tp
+        rules["kv_proj"] = tp
+    tp_size = _axis_size(mesh, tp) if tp else 1
+    if cfg is not None and cfg.num_heads:
+        if cfg.num_heads % tp_size != 0:
+            # heads not divisible (qwen3 40, llava 56, rg 10 on tp=16):
+            # replicate head-projections; activations fall back automatically.
+            rules["heads"] = None
+            rules["q_proj"] = None
+            if getattr(cfg, "ctx_parallel_attn", False):
+                # context parallelism: shard attention QUERY rows over the
+                # model axis instead — each shard computes all heads for its
+                # sequence slice (full KV), removing the tp_size× replication
+                # of attention compute (EXPERIMENTS.md §Perf iteration 4).
+                rules["seq_full"] = tp
+        if cfg.num_kv_heads % tp_size != 0:
+            rules["kv_heads"] = None
+            rules["kv_proj"] = None
+    return ShardingRules(mesh=mesh, rules=rules)
+
+
+def _fsdp_rules(mesh: Mesh, cfg) -> ShardingRules:
+    """FSDP/ZeRO-3 profile: no tensor parallelism. Batch shards over
+    (data, model) jointly; every param's *embed* dim shards over the same
+    axes (weights all-gathered per layer, grads reduce-scattered). Collective
+    bytes scale with weight size instead of activation size — the right
+    profile when TP-SP activation traffic dominates (small d_model, or
+    large-batch training of dense stacks; see EXPERIMENTS.md §Perf)."""
+    fs: Any = tuple(a for a in ("data", "model") if a in mesh.shape)
+    if len(fs) == 1:
+        fs = fs[0]
+    # pod stays pure gradient-replica DP so global_batch=256 still divides.
+    rules: Dict[str, Any] = {
+        "batch": fs,
+        "seq": None, "seq_full": None,
+        "heads": None, "kv_heads": None, "head_dim": None,
+        "moe_groups": fs,
+        "vocab": None, "embed": fs,
+        "mlp": None, "expert_mlp": None,
+        "q_proj": None, "kv_proj": None,
+        "experts": None, "rnn": None, "state": None,
+        "layers": None,
+        "kv_cache_seq": None,
+    }
+    return ShardingRules(mesh=mesh, rules=rules)
+
+
+def vocab_pad_for(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)

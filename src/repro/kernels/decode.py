@@ -1,0 +1,144 @@
+"""Flash-decode Pallas TPU kernel: one new query token vs. a long KV cache.
+
+The paper's fused-MHA dataflow applied to the inference-decode shape
+(``decode_32k`` / ``long_500k``): a single query row per (batch, kv-head)
+streams the KV cache HBM→VMEM once, maintaining online-softmax state in VMEM
+scratch.  This is purely memory-bound on TPU — the roofline term that matters
+is HBM bytes = bytes(K) + bytes(V), which this kernel achieves exactly (the
+naive path reads K, writes S, reads S, writes P, reads P and V: 3× more).
+
+GQA: the ``G = Hq // Hkv`` query heads sharing one KV head are batched into the
+MXU ``M`` dimension, so the two matmuls are [G,D]×[D,bkv] and [G,bkv]×[bkv,D] —
+the TPU analogue of the paper packing multiple MMA computations per warp.
+
+Ragged batches: ``kv_len [B]`` (scalar-prefetch) masks each row's valid cache
+length, and fully-out-of-range KV blocks are skipped with ``pl.when``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.online_softmax import NEG_INF
+
+LANES = 128
+
+
+def _decode_kernel(kv_len_ref,                    # scalar prefetch [B]
+                   q_ref, k_ref, v_ref,           # inputs
+                   o_ref,                         # output
+                   acc_ref, m_ref, l_ref,         # scratch
+                   *, scale: float, window: Optional[int], block_kv: int,
+                   acc_dtype):
+    b, hk, ik = (pl.program_id(i) for i in range(3))
+    nk = pl.num_programs(2)
+    kv_start = ik * block_kv
+    kv_len = kv_len_ref[b]                         # valid cache length, this row
+    q_pos = kv_len - 1                             # the query token's position
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    needed = kv_start < kv_len
+    if window is not None:
+        needed &= kv_start + block_kv - 1 > q_pos - window
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0]                            # [G, D]
+        k = k_ref[0, 0]                            # [bkv, D]
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=acc_dtype)
+        s = s.astype(jnp.float32) * scale          # [G, bkv]
+        kp = kv_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        allowed = kp < kv_len
+        if window is not None:
+            allowed &= kp > q_pos - window
+        s = jnp.where(allowed, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = jnp.broadcast_to((l_prev * alpha + jnp.sum(p, axis=1))[:, None],
+                                      l_ref.shape)
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=acc_dtype)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv.astype(jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _write():
+        l = l_ref[:, 0]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode(q, k, v, *, kv_len=None, window: Optional[int] = None,
+                 scale: Optional[float] = None, acc_dtype=jnp.float32,
+                 block_kv: int = 512, interpret: bool = False):
+    """q: [B, Hq, D]; k/v: [B, Hkv, S, D]; kv_len: [B] int32 (default: full S).
+
+    Returns o: [B, Hq, D] in q.dtype.
+    """
+    b, hq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    if kv_len is None:
+        kv_len = jnp.full((b,), skv, jnp.int32)
+
+    block_kv = min(block_kv, skv)
+    skv_pad = pl.cdiv(skv, block_kv) * block_kv
+    if skv_pad != skv:
+        pad = ((0, 0), (0, 0), (0, skv_pad - skv), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    nk = skv_pad // block_kv
+
+    # group q heads by kv head: [B, Hkv, G, D], pad G up to the 8-row MXU tile
+    qg = q.reshape(b, hkv, group, d)
+    g_pad = max(8, group)
+    if g_pad != group:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad - group), (0, 0)))
+
+    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
+                               block_kv=block_kv, acc_dtype=acc_dtype)
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, g_pad, d), lambda b_, h, ik, _: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda b_, h, ik, _: (b_, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda b_, h, ik, _: (b_, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g_pad, d), lambda b_, h, ik, _: (b_, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((g_pad, d), jnp.float32),
+                        pltpu.VMEM((g_pad, LANES), jnp.float32),
+                        pltpu.VMEM((g_pad, LANES), jnp.float32)],
+    )
+    o = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g_pad, d), q.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(kv_len.astype(jnp.int32), qg, k, v)
+    return o[:, :, :group].reshape(b, hq, d)

@@ -1,0 +1,272 @@
+"""Fused MHA-Backward Pallas TPU kernels (paper §3.3, adapted to TPU).
+
+The paper implements the backward as ONE kernel: each thread block owns a KV
+block, iterates over Q blocks, accumulates dK/dV locally and scatters dQ with
+HBM **atomic adds**.  TPUs have no HBM atomics; the TPU-idiomatic equivalent
+(documented in DESIGN.md §2) is a **dual-pass** design where each pass owns the
+tensor it accumulates, and the accumulation happens race-free in VMEM scratch
+across a *sequential* ("arbitrary") grid dimension:
+
+* pass 1 (`_dkv_kernel`): grid (B, Hq, kv_block, q_block) — dK/dV accumulate in
+  scratch over the q_block dim (exactly the paper's per-thread-block dK/dV
+  accumulation), written once on the last q iteration.
+* pass 2 (`_dq_kernel`): grid (B, Hq, q_block, kv_block) — dQ accumulates over
+  the kv_block dim, replacing the atomic adds.
+
+Both passes **recompute the forward** from Q/K (the paper's memory-saving
+choice) using the stored LSE — ``p = exp(s·scale − lse)`` — so S/P never exist
+in HBM.  ``delta = rowsum(dO ∘ O)`` (the paper's *dPsum*) is precomputed once.
+Dropout masks are regenerated from coordinates, bit-identical to the forward.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.online_softmax import NEG_INF
+from repro.kernels import rng
+
+
+def _recompute_p(q, k, lse, *, scale, causal, window, q_start, kv_start,
+                 block_q, block_kv, skv_real, acc_dtype,
+                 dropout_rate, dropout_seed, b, h):
+    """Recompute probs p [bq, bkv] (f32) + dropout keep mask from stored LSE."""
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=acc_dtype)
+    s = s.astype(jnp.float32) * scale
+    qp = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+    kp = kv_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+    allowed = None
+    if causal:
+        allowed = kp <= qp
+    if window is not None:
+        w_ok = kp > qp - window
+        allowed = w_ok if allowed is None else (allowed & w_ok)
+    pad_ok = kp < skv_real  # pad mask is cheap; always applied
+    allowed = pad_ok if allowed is None else (allowed & pad_ok)
+    if allowed is not None:
+        s = jnp.where(allowed, s, NEG_INF)
+    p = jnp.exp(s - lse[:, None])          # normalised probs, rows with lse
+    keep = None
+    if dropout_rate > 0.0:
+        keep = rng.dropout_keep_mask(dropout_rate, dropout_seed, b, h, qp, kp)
+    return p, keep
+
+
+def _dkv_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_acc, dv_acc,
+                *, scale, causal, window, dropout_rate,
+                block_q, block_kv, sq_real, skv_real, acc_dtype):
+    b, h, ik, iq = (pl.program_id(i) for i in range(4))
+    nq = pl.num_programs(3)
+    q_offset = skv_real - sq_real
+    q_start = iq * block_q + q_offset
+    kv_start = ik * block_kv
+
+    @pl.when(iq == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    needed = jnp.bool_(q_start < sq_real + q_offset)  # padded q tail
+    if causal:
+        needed &= kv_start <= q_start + block_q - 1
+    if window is not None:
+        needed &= kv_start + block_kv - 1 > q_start - window
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0]          # [bq, D]
+        k = k_ref[0, 0]          # [bkv, D]
+        v = v_ref[0, 0]
+        do = do_ref[0, 0]        # [bq, D]
+        lse = lse_ref[0, 0]      # [bq] f32
+        delta = delta_ref[0, 0]  # [bq] f32
+
+        p, keep = _recompute_p(
+            q, k, lse, scale=scale, causal=causal, window=window,
+            q_start=q_start, kv_start=kv_start, block_q=block_q,
+            block_kv=block_kv, skv_real=skv_real, acc_dtype=acc_dtype,
+            dropout_rate=dropout_rate, dropout_seed=seed_ref[0], b=b, h=h)
+
+        p_kept = p if keep is None else jnp.where(keep, p / (1.0 - dropout_rate), 0.0)
+        # dV += P̃ᵀ · dO
+        dv_acc[...] += jax.lax.dot_general(
+            p_kept.astype(do.dtype), do, (((0,), (0,)), ((), ())),
+            preferred_element_type=acc_dtype).astype(jnp.float32)
+        # dP = dO · Vᵀ  (masked by the same dropout keep-mask)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=acc_dtype).astype(jnp.float32)
+        if keep is not None:
+            dp = jnp.where(keep, dp / (1.0 - dropout_rate), 0.0)
+        # dS = P ∘ (dP − delta) · scale   (delta = paper's dPsum)
+        ds = p * (dp - delta[:, None]) * scale
+        # dK += dSᵀ · Q
+        dk_acc[...] += jax.lax.dot_general(
+            ds.astype(q.dtype), q, (((0,), (0,)), ((), ())),
+            preferred_element_type=acc_dtype).astype(jnp.float32)
+
+    @pl.when(iq == nq - 1)
+    def _write():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def _dq_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+               dq_ref, dq_acc,
+               *, scale, causal, window, dropout_rate,
+               block_q, block_kv, sq_real, skv_real, acc_dtype):
+    b, h, iq, ik = (pl.program_id(i) for i in range(4))
+    nk = pl.num_programs(3)
+    q_offset = skv_real - sq_real
+    q_start = iq * block_q + q_offset
+    kv_start = ik * block_kv
+
+    @pl.when(ik == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    needed = jnp.bool_(kv_start < skv_real)
+    if causal:
+        needed &= kv_start <= q_start + block_q - 1
+    if window is not None:
+        needed &= kv_start + block_kv - 1 > q_start - window
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0]
+        k = k_ref[0, 0]
+        v = v_ref[0, 0]
+        do = do_ref[0, 0]
+        lse = lse_ref[0, 0]
+        delta = delta_ref[0, 0]
+
+        p, keep = _recompute_p(
+            q, k, lse, scale=scale, causal=causal, window=window,
+            q_start=q_start, kv_start=kv_start, block_q=block_q,
+            block_kv=block_kv, skv_real=skv_real, acc_dtype=acc_dtype,
+            dropout_rate=dropout_rate, dropout_seed=seed_ref[0], b=b, h=h)
+
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=acc_dtype).astype(jnp.float32)
+        if keep is not None:
+            dp = jnp.where(keep, dp / (1.0 - dropout_rate), 0.0)
+        ds = p * (dp - delta[:, None]) * scale
+        # dQ += dS · K   — VMEM-scratch accumulation replaces the paper's atomics
+        dq_acc[...] += jax.lax.dot_general(
+            ds.astype(k.dtype), k, (((1,), (0,)), ((), ())),
+            preferred_element_type=acc_dtype).astype(jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _write():
+        dq_ref[0, 0] = dq_acc[...].astype(dq_ref.dtype)
+
+
+def flash_bwd(q, k, v, o, lse, do, *, causal: bool = False,
+              window: Optional[int] = None, scale: Optional[float] = None,
+              dropout_rate: float = 0.0, dropout_seed: int = 0,
+              acc_dtype=jnp.float32, block_q: int = 128, block_kv: int = 128,
+              interpret: bool = False):
+    """Returns (dq, dk, dv) with the shapes/dtypes of q, k, v."""
+    b, hq, sq_real, d = q.shape
+    _, hkv, skv_real, _ = k.shape
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+
+    # delta = rowsum(dO ∘ O) — the paper's dPsum, precomputed once (f32).
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+
+    block_q = min(block_q, max(sq_real, 8))
+    block_kv = min(block_kv, max(skv_real, 8))
+    sq = pl.cdiv(sq_real, block_q) * block_q
+    skv = pl.cdiv(skv_real, block_kv) * block_kv
+    if sq != sq_real:
+        pad_q = ((0, 0), (0, 0), (0, sq - sq_real), (0, 0))
+        q = jnp.pad(q, pad_q)
+        do = jnp.pad(do, pad_q)
+        # padded rows: lse=+inf would give p=0; use large positive to zero probs
+        lse = jnp.pad(lse, ((0, 0), (0, 0), (0, sq - sq_real)),
+                      constant_values=-NEG_INF)
+        delta = jnp.pad(delta, ((0, 0), (0, 0), (0, sq - sq_real)))
+    if skv != skv_real:
+        pad_kv = ((0, 0), (0, 0), (0, skv - skv_real), (0, 0))
+        k = jnp.pad(k, pad_kv)
+        v = jnp.pad(v, pad_kv)
+
+    nq, nk = sq // block_q, skv // block_kv
+    common = dict(scale=scale, causal=causal, window=window,
+                  dropout_rate=dropout_rate,
+                  block_q=block_q, block_kv=block_kv,
+                  sq_real=sq_real, skv_real=skv_real, acc_dtype=acc_dtype)
+
+    q_spec = pl.BlockSpec((1, 1, block_q, d), lambda b_, h, i, j, _: (b_, h, j, 0))
+    kv_spec = pl.BlockSpec((1, 1, block_kv, d),
+                           lambda b_, h, i, j, _: (b_, h // group, i, 0))
+    row_spec = pl.BlockSpec((1, 1, block_q), lambda b_, h, i, j, _: (b_, h, j))
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"))
+
+    seed = jnp.atleast_1d(jnp.asarray(dropout_seed, jnp.int32))
+
+    # ---- pass 1: dK, dV (per q-head; GQA groups reduced below) ----
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, **common),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, hq, nk, nq),
+            in_specs=[q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec],
+            out_specs=[
+                pl.BlockSpec((1, 1, block_kv, d),
+                             lambda b_, h, i, j, _: (b_, h, i, 0)),
+                pl.BlockSpec((1, 1, block_kv, d),
+                             lambda b_, h, i, j, _: (b_, h, i, 0)),
+            ],
+            scratch_shapes=[pltpu.VMEM((block_kv, d), jnp.float32),
+                            pltpu.VMEM((block_kv, d), jnp.float32)],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, skv, d), k.dtype),
+            jax.ShapeDtypeStruct((b, hq, skv, d), v.dtype),
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(seed, q, k, v, do, lse, delta)
+
+    # ---- pass 2: dQ ----
+    q_spec2 = pl.BlockSpec((1, 1, block_q, d), lambda b_, h, i, j, _: (b_, h, i, 0))
+    kv_spec2 = pl.BlockSpec((1, 1, block_kv, d),
+                            lambda b_, h, i, j, _: (b_, h // group, j, 0))
+    row_spec2 = pl.BlockSpec((1, 1, block_q), lambda b_, h, i, j, _: (b_, h, i))
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, **common),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, hq, nq, nk),
+            in_specs=[q_spec2, kv_spec2, kv_spec2, q_spec2, row_spec2, row_spec2],
+            out_specs=pl.BlockSpec((1, 1, block_q, d),
+                                   lambda b_, h, i, j, _: (b_, h, i, 0)),
+            scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(seed, q, k, v, do, lse, delta)
+
+    if sq != sq_real:
+        dq = dq[:, :, :sq_real]
+    if skv != skv_real:
+        dk = dk[:, :, :skv_real]
+        dv = dv[:, :, :skv_real]
+    if group > 1:  # GQA: reduce the per-q-head dK/dV over each group
+        dk = dk.reshape(b, hkv, group, skv_real, d).sum(axis=2).astype(k.dtype)
+        dv = dv.reshape(b, hkv, group, skv_real, d).sum(axis=2).astype(v.dtype)
+    return dq, dk, dv

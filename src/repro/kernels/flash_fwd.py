@@ -1,0 +1,190 @@
+"""Fused MHA-Forward Pallas TPU kernel (paper §3.2, adapted to MXU/VMEM).
+
+One `pl.pallas_call` computes ``O = dropout(softmax(QKᵀ·scale))·V`` without ever
+writing S or P to HBM — the paper's 3-reads + 1-write I/O profile.  The Volta
+warp mechanics (m8n8k4 MMA, register layout transform between the two matmuls)
+are replaced by their TPU-native equivalents:
+
+* grid = (batch, q_head, q_block, kv_block); the kv_block dim is sequential
+  ("arbitrary"), so the online-softmax state lives in VMEM scratch across
+  iterations — the role the paper's registers/SRAM play on Volta.
+* the S→P→(P·V) chain happens inside one kernel body; Mosaic owns the VREG
+  relayout between the two `jnp.dot`s (the paper's warp-level layout transform).
+* ``acc_dtype`` selects bf16-ACC / f32-ACC matmul accumulation
+  (paper's FP16-ACC / FP32-ACC). Softmax state is always f32 (paper §3.2.1).
+* causal / sliding-window blocks that are fully masked are skipped with
+  `pl.when` (the paper's thread-block early exit).
+* dropout masks are regenerated from element coordinates (kernels/rng.py), so
+  the backward recompute sees identical masks with zero HBM mask traffic.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.online_softmax import NEG_INF
+from repro.kernels import rng
+
+LANES = 128  # TPU vector lane width; (rows, LANES) f32 scratch for m/l state
+
+
+def _fwd_kernel(seed_ref,                       # scalar prefetch [1] (dropout seed)
+                q_ref, k_ref, v_ref,            # inputs
+                o_ref, lse_ref,                 # outputs
+                acc_ref, m_ref, l_ref,          # VMEM scratch
+                *, scale: float, causal: bool, window: Optional[int],
+                dropout_rate: float,
+                block_q: int, block_kv: int, sq: int, skv: int,
+                sq_real: int, skv_real: int, acc_dtype):
+    b, h, iq, ik = (pl.program_id(i) for i in range(4))
+    nk = pl.num_programs(3)
+    q_offset = skv_real - sq_real          # q tokens are the suffix of kv
+    q_start = iq * block_q + q_offset      # global position of first q row
+    kv_start = ik * block_kv
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # ---- block-level early exit (fully-masked blocks do no compute) ----
+    needed = jnp.bool_(True)
+    if causal:
+        needed &= kv_start <= q_start + block_q - 1
+    if window is not None:
+        needed &= kv_start + block_kv - 1 > q_start - window
+    if skv != skv_real:  # padded kv tail block may be entirely out of range
+        needed &= kv_start < skv_real
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0]                                     # [bq, D]
+        k = k_ref[0, 0]                                     # [bkv, D]
+        v = v_ref[0, 0]                                     # [bkv, D]
+        # First matmul (S = Q Kᵀ) with selectable accumulate precision.
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=acc_dtype)
+        s = s.astype(jnp.float32) * scale                   # softmax math in f32
+
+        qp = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+        kp = kv_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        allowed = None
+        if causal:
+            allowed = kp <= qp
+        if window is not None:
+            w_ok = kp > qp - window
+            allowed = w_ok if allowed is None else (allowed & w_ok)
+        if skv != skv_real:
+            pad_ok = kp < skv_real
+            allowed = pad_ok if allowed is None else (allowed & pad_ok)
+        if allowed is not None:
+            s = jnp.where(allowed, s, NEG_INF)
+
+        # ---- online softmax update (paper Eq. 3) ----
+        m_prev = m_ref[:, 0]                                # [bq]
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)                     # rescale factor
+        p = jnp.exp(s - m_new[:, None])                     # [bq, bkv] f32
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+        if dropout_rate > 0.0:
+            keep = rng.dropout_keep_mask(dropout_rate, seed_ref[0], b, h, qp, kp)
+            p = jnp.where(keep, p / (1.0 - dropout_rate), 0.0)
+
+        # Second matmul (P·V): P downcast to the input dtype for the MXU —
+        # the paper's layout transform converts MMA-C to MMA-A layout here.
+        pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=acc_dtype)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv.astype(jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_ref[:, 0]
+        l_safe = jnp.where(l == 0.0, 1.0, l)                # fully-masked rows → 0
+        o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0] = m_ref[:, 0] + jnp.log(l_safe)
+
+
+def flash_fwd(q, k, v, *, causal: bool = False, window: Optional[int] = None,
+              scale: Optional[float] = None, dropout_rate: float = 0.0,
+              dropout_seed: int = 0, acc_dtype=jnp.float32,
+              block_q: int = 128, block_kv: int = 128,
+              interpret: bool = False):
+    """Returns (o [B,Hq,Sq,D], lse [B,Hq,Sq] f32). Pads seq dims to block multiples."""
+    b, hq, sq_real, d = q.shape
+    _, hkv, skv_real, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+
+    block_q = min(block_q, max(sq_real, 8))
+    block_kv = min(block_kv, max(skv_real, 8))
+    sq = pl.cdiv(sq_real, block_q) * block_q
+    skv = pl.cdiv(skv_real, block_kv) * block_kv
+    if sq != sq_real:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sq - sq_real), (0, 0)))
+    if skv != skv_real:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, skv - skv_real), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, skv - skv_real), (0, 0)))
+
+    nq, nk = sq // block_q, skv // block_kv
+
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, causal=causal, window=window,
+        dropout_rate=dropout_rate,
+        block_q=block_q, block_kv=block_kv, sq=sq, skv=skv,
+        sq_real=sq_real, skv_real=skv_real, acc_dtype=acc_dtype)
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"))
+
+    seed = jnp.atleast_1d(jnp.asarray(dropout_seed, jnp.int32))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b_, h, iq, ik, _: (b_, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda b_, h, iq, ik, _: (b_, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda b_, h, iq, ik, _: (b_, h // group, ik, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b_, h, iq, ik, _: (b_, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b_, h, iq, ik, _: (b_, h, iq)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+        ],
+    )
+    o, lse = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+            jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(seed, q, k, v)
+
+    if sq != sq_real:
+        o = o[:, :, :sq_real]
+        lse = lse[:, :, :sq_real]
+    return o, lse

@@ -1,0 +1,121 @@
+"""Public jit-friendly attention ops wiring the Pallas kernels into autodiff.
+
+``mha`` is the trainable fused attention: forward = flash_fwd kernel, backward
+= flash_bwd dual-pass kernels (with forward recompute), glued with
+``jax.custom_vjp`` exactly the way the paper glues its CUDA kernels into
+PyTorch autograd via pybind11.
+
+``AttnConfig`` carries every static option (hashable → usable as a
+nondiff argnum). The dropout seed is a *traced* scalar so a jitted train step
+can use a fresh seed every step without recompilation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_bwd import flash_bwd
+from repro.kernels.flash_fwd import flash_fwd
+from repro.kernels.decode import flash_decode
+from repro.kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    causal: bool = False
+    window: Optional[int] = None
+    scale: Optional[float] = None
+    dropout_rate: float = 0.0
+    acc_dtype: Any = jnp.float32       # bf16-ACC / f32-ACC (paper §3.1)
+    bwd_acc_dtype: Any = jnp.float32   # paper uses fp16-ACC for backward
+    block_q: int = 128
+    block_kv: int = 128
+    interpret: bool = False
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _mha(q, k, v, seed, cfg: AttnConfig):
+    o, _ = flash_fwd(q, k, v, causal=cfg.causal, window=cfg.window,
+                     scale=cfg.scale, dropout_rate=cfg.dropout_rate,
+                     dropout_seed=seed, acc_dtype=cfg.acc_dtype,
+                     block_q=cfg.block_q, block_kv=cfg.block_kv,
+                     interpret=cfg.interpret)
+    return o
+
+
+def _mha_fwd(q, k, v, seed, cfg: AttnConfig):
+    o, lse = flash_fwd(q, k, v, causal=cfg.causal, window=cfg.window,
+                       scale=cfg.scale, dropout_rate=cfg.dropout_rate,
+                       dropout_seed=seed, acc_dtype=cfg.acc_dtype,
+                       block_q=cfg.block_q, block_kv=cfg.block_kv,
+                       interpret=cfg.interpret)
+    # Residuals: q,k,v + (o, lse) — S/P are recomputed in the backward kernels,
+    # the paper's memory-saving choice (§3.3).
+    return o, (q, k, v, o, lse, seed)
+
+
+def _mha_bwd(cfg: AttnConfig, res, do):
+    q, k, v, o, lse, seed = res
+    dq, dk, dv = flash_bwd(q, k, v, o, lse, do, causal=cfg.causal,
+                           window=cfg.window, scale=cfg.scale,
+                           dropout_rate=cfg.dropout_rate, dropout_seed=seed,
+                           acc_dtype=cfg.bwd_acc_dtype,
+                           block_q=cfg.block_q, block_kv=cfg.block_kv,
+                           interpret=cfg.interpret)
+    return dq, dk, dv, None
+
+
+_mha.defvjp(_mha_fwd, _mha_bwd)
+
+
+def mha(q, k, v, *, seed=0, config: AttnConfig = AttnConfig()):
+    """Fused multi-head attention, differentiable.
+
+    q: [B, Hq, Sq, D], k/v: [B, Hkv, Skv, D] → o: [B, Hq, Sq, D].
+    """
+    seed = jnp.asarray(seed, jnp.int32)
+    return _mha(q, k, v, seed, config)
+
+
+def mha_reference(q, k, v, *, seed=0, config: AttnConfig = AttnConfig()):
+    """The unfused oracle with identical semantics (paper's PyTorch baseline)."""
+    return ref.naive_mha(q, k, v, causal=config.causal, window=config.window,
+                         scale=config.scale, dropout_rate=config.dropout_rate,
+                         dropout_seed=seed, acc_dtype=jnp.float32)
+
+
+def mha_xla(q, k, v, *, seed=0, config: AttnConfig = AttnConfig(),
+            chunk: int = 1024, unroll: bool = False):
+    """The fused algorithm in plain XLA ops (dry-run / CPU-runnable path)."""
+    return ref.online_mha(q, k, v, causal=config.causal, window=config.window,
+                          scale=config.scale, dropout_rate=config.dropout_rate,
+                          dropout_seed=seed, acc_dtype=jnp.float32, chunk=chunk,
+                          unroll=unroll)
+
+
+def decode(q, k, v, *, kv_len=None, window=None, scale=None,
+           block_kv: int = 512, interpret: bool = False):
+    """Single-token flash-decode. q: [B, Hq, D], k/v: [B, Hkv, S, D]."""
+    return flash_decode(q, k, v, kv_len=kv_len, window=window, scale=scale,
+                        block_kv=block_kv, interpret=interpret)
+
+
+def decode_reference(q, k, v, *, kv_len=None, window=None, scale=None):
+    """Oracle for decode (handles ragged kv_len row by row via masking)."""
+    b, hq, d = q.shape
+    skv = k.shape[2]
+    if kv_len is None:
+        return ref.naive_mha(q[:, :, None, :], k, v, causal=True,
+                             window=window, scale=scale)[:, :, 0, :]
+    outs = []
+    for i in range(b):
+        L = int(kv_len[i])
+        outs.append(ref.naive_mha(q[i:i + 1, :, None, :], k[i:i + 1, :, :L],
+                                  v[i:i + 1, :, :L], causal=True,
+                                  window=window, scale=scale)[:, :, 0, :])
+    return jnp.concatenate(outs, axis=0)

@@ -1,0 +1,319 @@
+"""Pure-jnp oracles for the SparkAttention kernels.
+
+Two references:
+
+* :func:`naive_mha` — the "traditional" unfused computation the paper benchmarks
+  against (materialises S and P; 5 HBM reads + 3 writes in the paper's I/O
+  accounting). Used as the numerical oracle for every kernel test and as the
+  *baseline* implementation in the paper-table benchmarks.
+
+* :func:`online_mha` — the same fused *algorithm* as the Pallas kernel but
+  expressed as a chunked ``lax.scan`` in plain XLA ops (O(chunk) memory, online
+  softmax). This is what the multi-pod dry-run lowers, so the compiled HLO's
+  memory profile matches the kernel's algorithm instead of the naive O(N²) one.
+
+Conventions (shared by every implementation in this repo):
+  q: [B, Hq, Sq, D]   k/v: [B, Hkv, Skv, D]   with Hq % Hkv == 0 (GQA)
+  q tokens are the *suffix* of the kv sequence: global q position =
+  (Skv - Sq) + i. ``causal`` masks kv_pos > q_pos; ``window=w`` additionally
+  masks kv_pos <= q_pos - w (sliding-window / local attention).
+Returns (o [B, Hq, Sq, D] in q.dtype, lse [B, Hq, Sq] f32).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.online_softmax import NEG_INF, SoftmaxState, finalize, update
+from repro.kernels import rng
+
+
+def _expand_kv(x: jnp.ndarray, hq: int) -> jnp.ndarray:
+    """[B, Hkv, S, D] -> [B, Hq, S, D] by repeating each kv head over its group."""
+    b, hkv, s, d = x.shape
+    if hkv == hq:
+        return x
+    assert hq % hkv == 0, f"GQA requires Hq % Hkv == 0, got {hq} % {hkv}"
+    return jnp.repeat(x, hq // hkv, axis=1)
+
+
+def mask_bias(sq: int, skv: int, *, causal: bool, window: Optional[int],
+              dtype=jnp.float32) -> Optional[jnp.ndarray]:
+    """[Sq, Skv] additive bias (0 where allowed, NEG_INF where masked)."""
+    if not causal and window is None:
+        return None
+    offset = skv - sq
+    qp = jnp.arange(sq)[:, None] + offset
+    kp = jnp.arange(skv)[None, :]
+    allowed = jnp.ones((sq, skv), bool)
+    if causal:
+        allowed &= kp <= qp
+    if window is not None:
+        allowed &= kp > qp - window
+    return jnp.where(allowed, 0.0, NEG_INF).astype(dtype)
+
+
+def dropout_mask(seed: int, b_idx, h_idx, sq: int, skv: int, rate: float,
+                 q_offset: int = 0) -> jnp.ndarray:
+    """Full [Sq, Skv] keep-mask for one (batch, head) — mirrors the in-kernel RNG."""
+    qp = (jnp.arange(sq, dtype=jnp.int32) + q_offset)[:, None]
+    kp = jnp.arange(skv, dtype=jnp.int32)[None, :]
+    return rng.dropout_keep_mask(rate, seed, b_idx, h_idx, qp, kp)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "dropout_rate",
+                                             "acc_dtype", "return_residuals"))
+def naive_mha(q, k, v, *, causal: bool = False, window: Optional[int] = None,
+              scale: Optional[float] = None, dropout_rate: float = 0.0,
+              dropout_seed: int = 0, acc_dtype=jnp.float32,
+              return_residuals: bool = False):
+    """Unfused attention oracle. All softmax math in f32; matmuls in acc_dtype."""
+    b, hq, sq, d = q.shape
+    scale = (d ** -0.5) if scale is None else scale
+    k = _expand_kv(k, hq)
+    v = _expand_kv(v, hq)
+
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=acc_dtype).astype(jnp.float32) * scale
+    bias = mask_bias(sq, k.shape[2], causal=causal, window=window)
+    if bias is not None:
+        s = s + bias
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    lse = (m + jnp.log(l))[..., 0]
+    p = p / l
+    if dropout_rate > 0.0:
+        q_offset = k.shape[2] - sq
+        bi = jnp.arange(b, dtype=jnp.int32)[:, None, None, None]
+        hi = jnp.arange(hq, dtype=jnp.int32)[None, :, None, None]
+        qp = (jnp.arange(sq, dtype=jnp.int32) + q_offset)[None, None, :, None]
+        kp = jnp.arange(k.shape[2], dtype=jnp.int32)[None, None, None, :]
+        keep = rng.dropout_keep_mask(dropout_rate, dropout_seed, bi, hi, qp, kp)
+        p = jnp.where(keep, p / (1.0 - dropout_rate), 0.0)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(q.dtype), v,
+                   preferred_element_type=acc_dtype).astype(q.dtype)
+    if return_residuals:
+        return o, lse
+    return o
+
+
+def _fold_gqa(q, hkv):
+    """[B,Hq,Sq,D] → [B,Hkv,Sq·G,D] with **sq-major** row order: row =
+    sq_idx·G + group_idx. K/V are used per kv-head directly (no G× expansion)
+    AND a sharding on Sq propagates through the merge (major-component merge
+    is GSPMD-representable — the [g,sq] minor-merge ordering forced full
+    replication of context-parallel attention, §Perf iteration 4)."""
+    b, hq, sq, d = q.shape
+    g = hq // hkv
+    q = q.reshape(b, hkv, g, sq, d).transpose(0, 1, 3, 2, 4)  # [b,hkv,sq,g,d]
+    return q.reshape(b, hkv, sq * g, d), g
+
+
+def _unfold_gqa(x, hq, sq):
+    """[B,Hkv,Sq·G,(D)] → [B,Hq,Sq,(D)], inverse of _fold_gqa."""
+    b, hkv = x.shape[:2]
+    g = hq // hkv
+    tail = x.shape[3:]
+    x = x.reshape(b, hkv, sq, g, *tail)
+    x = jnp.moveaxis(x, 3, 2)                                 # [b,hkv,g,sq,..]
+    return x.reshape(b, hq, sq, *tail)
+
+
+def _block_masks(b, hkv, g, sq, chunk, ci, *, q_offset, causal, window,
+                 dropout_rate, dropout_seed):
+    """(additive-mask allowed, dropout keep) for folded-GQA score blocks.
+    Row order is sq-major: qp = row // g, group = row % g."""
+    rows = sq * g
+    row = jnp.arange(rows, dtype=jnp.int32)
+    qp = (row // g + q_offset)[:, None]                  # [rows, 1]
+    kp = (jnp.arange(chunk, dtype=jnp.int32) + ci * chunk)[None, :]
+    allowed = None
+    if causal:
+        allowed = kp <= qp
+    if window is not None:
+        w_ok = kp > qp - window
+        allowed = w_ok if allowed is None else (allowed & w_ok)
+    keep = None
+    if dropout_rate > 0.0:
+        bi = jnp.arange(b, dtype=jnp.int32)[:, None, None, None]
+        hk = jnp.arange(hkv, dtype=jnp.int32)[None, :, None, None]
+        hq_row = (hk * g + (row % g)[None, None, :, None])   # global q head
+        keep = rng.dropout_keep_mask(dropout_rate, dropout_seed, bi, hq_row,
+                                     qp[None, None], kp[None, None])
+    return allowed, keep
+
+
+def _online_fwd(q, k, v, seed, *, causal, window, scale, dropout_rate,
+                acc_dtype, chunk, unroll):
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    if skv % chunk != 0:
+        chunk = skv
+    n_chunks = skv // chunk
+    q_offset = skv - sq
+    qf, g = _fold_gqa(q.astype(acc_dtype), hkv)
+
+    kc = k.reshape(b, hkv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hkv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+
+    def body(state: SoftmaxState, inputs):
+        ci, k_blk, v_blk = inputs
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, k_blk.astype(acc_dtype),
+                       preferred_element_type=acc_dtype
+                       ).astype(jnp.float32) * scale
+        allowed, keep = _block_masks(b, hkv, g, sq, chunk, ci,
+                                     q_offset=q_offset, causal=causal,
+                                     window=window, dropout_rate=dropout_rate,
+                                     dropout_seed=seed)
+        if allowed is not None:
+            s = jnp.where(allowed, s, NEG_INF)
+        m_new = jnp.maximum(state.m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(state.m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = state.l * alpha + jnp.sum(p, axis=-1)
+        p_kept = p if keep is None else \
+            jnp.where(keep, p / (1.0 - dropout_rate), 0.0)
+        acc_new = (state.acc * alpha[..., None]
+                   + jnp.einsum("bhqk,bhkd->bhqd", p_kept.astype(acc_dtype),
+                                v_blk.astype(acc_dtype),
+                                preferred_element_type=acc_dtype
+                                ).astype(jnp.float32))
+        return SoftmaxState(m_new, l_new, acc_new), None
+
+    rows = g * sq
+    init = SoftmaxState(
+        m=jnp.full((b, hkv, rows), NEG_INF, jnp.float32),
+        l=jnp.zeros((b, hkv, rows), jnp.float32),
+        acc=jnp.zeros((b, hkv, rows, d), jnp.float32),
+    )
+    if unroll:  # dry-run cost pass: scan bodies are undercounted by XLA cost
+        state = init
+        for ci in range(n_chunks):
+            state, _ = body(state, (jnp.int32(ci), kc[ci], vc[ci]))
+    else:
+        state, _ = jax.lax.scan(body, init,
+                                (jnp.arange(n_chunks), kc, vc))
+    o, lse = finalize(state, out_dtype=q.dtype)
+    o = _unfold_gqa(o, hq, sq)
+    lse = _unfold_gqa(lse, hq, sq)
+    return o, lse
+
+
+def _online_bwd(q, k, v, o, lse, do, seed, *, causal, window, scale,
+                dropout_rate, acc_dtype, chunk, unroll):
+    """Chunked recompute backward — the XLA mirror of kernels/flash_bwd.py.
+
+    Memory stays O(chunk): only (o, lse) are saved by the forward; S/P are
+    recomputed per kv chunk from the stored LSE (paper §3.3)."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    if skv % chunk != 0:
+        chunk = skv
+    n_chunks = skv // chunk
+    q_offset = skv - sq
+    g = hq // hkv
+    qf = _fold_gqa(q.astype(acc_dtype), hkv)[0]
+    dof = _fold_gqa(do.astype(acc_dtype), hkv)[0]
+    lsef = _fold_gqa(lse[..., None], hkv)[0][..., 0]
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+    deltaf = _fold_gqa(delta[..., None], hkv)[0][..., 0]
+
+    kc = k.reshape(b, hkv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hkv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+
+    def body(dq_acc, inputs):
+        ci, k_blk, v_blk = inputs
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, k_blk.astype(acc_dtype),
+                       preferred_element_type=acc_dtype
+                       ).astype(jnp.float32) * scale
+        allowed, keep = _block_masks(b, hkv, g, sq, chunk, ci,
+                                     q_offset=q_offset, causal=causal,
+                                     window=window, dropout_rate=dropout_rate,
+                                     dropout_seed=seed)
+        if allowed is not None:
+            s = jnp.where(allowed, s, NEG_INF)
+        p = jnp.exp(s - lsef[..., None])                  # recomputed probs
+        p_kept = p if keep is None else \
+            jnp.where(keep, p / (1.0 - dropout_rate), 0.0)
+        dv_blk = jnp.einsum("bhqk,bhqd->bhkd", p_kept.astype(acc_dtype), dof,
+                            preferred_element_type=acc_dtype)
+        dp = jnp.einsum("bhqd,bhkd->bhqk", dof, v_blk.astype(acc_dtype),
+                        preferred_element_type=acc_dtype).astype(jnp.float32)
+        if keep is not None:
+            dp = jnp.where(keep, dp / (1.0 - dropout_rate), 0.0)
+        ds = p * (dp - deltaf[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum(
+            "bhqk,bhkd->bhqd", ds.astype(acc_dtype), k_blk.astype(acc_dtype),
+            preferred_element_type=acc_dtype).astype(jnp.float32)
+        dk_blk = jnp.einsum("bhqk,bhqd->bhkd", ds.astype(acc_dtype), qf,
+                            preferred_element_type=acc_dtype)
+        return dq_acc, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((b, hkv, g * sq, d), jnp.float32)
+    if unroll:
+        dq_acc, dks, dvs = dq0, [], []
+        for ci in range(n_chunks):
+            dq_acc, (dkb, dvb) = body(dq_acc, (jnp.int32(ci), kc[ci], vc[ci]))
+            dks.append(dkb)
+            dvs.append(dvb)
+        dk_st = jnp.stack(dks)
+        dv_st = jnp.stack(dvs)
+    else:
+        dq_acc, (dk_st, dv_st) = jax.lax.scan(
+            body, dq0, (jnp.arange(n_chunks), kc, vc))
+    dq = _unfold_gqa(dq_acc, hq, sq).astype(q.dtype)
+    dk = dk_st.transpose(1, 2, 0, 3, 4).reshape(b, hkv, skv, d).astype(k.dtype)
+    dv = dv_st.transpose(1, 2, 0, 3, 4).reshape(b, hkv, skv, d).astype(v.dtype)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _online_cv(q, k, v, seed, statics):
+    o, _ = _online_fwd(q, k, v, seed, **dict(statics))
+    return o
+
+
+def _online_cv_fwd(q, k, v, seed, statics):
+    o, lse = _online_fwd(q, k, v, seed, **dict(statics))
+    return o, (q, k, v, o, lse, seed)
+
+
+def _online_cv_bwd(statics, res, do):
+    q, k, v, o, lse, seed = res
+    dq, dk, dv = _online_bwd(q, k, v, o, lse, do, seed, **dict(statics))
+    return dq, dk, dv, None
+
+
+_online_cv.defvjp(_online_cv_fwd, _online_cv_bwd)
+
+
+def online_mha(q, k, v, *, causal: bool = False, window: Optional[int] = None,
+               scale: Optional[float] = None, dropout_rate: float = 0.0,
+               dropout_seed: int = 0, acc_dtype=jnp.float32,
+               chunk: int = 1024, unroll: bool = False,
+               return_residuals: bool = False):
+    """Chunked online-softmax attention in plain XLA (the kernel's algorithm).
+
+    O(chunk) memory in BOTH directions: the forward scans kv chunks carrying
+    (m, l, acc); the custom-vjp backward recomputes S/P per chunk from the
+    stored LSE exactly like kernels/flash_bwd.py — without it, differentiating
+    through the scan would save the full f32 acc carry per chunk (≈5 GB/layer
+    at 32k/40-head scales; found via the dry-run memory pass, EXPERIMENTS.md
+    §Perf). GQA folds the q-head group into rows instead of expanding K/V.
+    """
+    b, hq, sq, d = q.shape
+    scale = (d ** -0.5) if scale is None else scale
+    statics = tuple(dict(causal=causal, window=window, scale=scale,
+                         dropout_rate=dropout_rate, acc_dtype=acc_dtype,
+                         chunk=chunk, unroll=unroll).items())
+    seed = jnp.asarray(dropout_seed, jnp.int32)
+    if return_residuals:
+        return _online_fwd(q, k, v, seed, causal=causal, window=window,
+                           scale=scale, dropout_rate=dropout_rate,
+                           acc_dtype=acc_dtype, chunk=chunk, unroll=unroll)
+    return _online_cv(q, k, v, seed, statics)

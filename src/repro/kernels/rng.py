@@ -1,0 +1,61 @@
+"""Counter-based dropout RNG usable inside Pallas kernel bodies.
+
+The paper applies dropout *inside* the fused kernel and replays the identical
+mask during the backward recompute ("we apply the same dropout logic as in the
+MHA-Forward process to obtain consistent dropout results").  CUDA does this with
+curand seeded per thread; on TPU (and in interpret mode) we instead derive the
+mask *functionally* from the element's global coordinates, so forward and the
+two backward passes regenerate bit-identical masks with zero HBM traffic.
+
+This is a small Philox-inspired integer hash (3 rounds of multiply/xor-shift
+mixing) over (seed, batch, head, q_position, kv_position).  It is built from
+plain int32 vector ops only, so it lowers on Mosaic/TPU, XLA:CPU, and in Pallas
+interpret mode identically.  It is a *dropout-grade* generator (decorrelated,
+uniform-ish), not a cryptographic one.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# odd 32-bit mixing constants (from splitmix64 / murmur3 finalizers).
+# Kept as plain python ints: Pallas kernel bodies may not close over arrays.
+_M1 = 0x85EBCA6B
+_M2 = 0xC2B2AE35
+_M3 = 0x27D4EB2F
+_GOLDEN = 0x9E3779B9
+
+
+def _mix(x: jnp.ndarray) -> jnp.ndarray:
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(_M1)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(_M2)
+    x = x ^ (x >> 16)
+    return x
+
+
+def random_bits(seed, b, h, q_pos, kv_pos) -> jnp.ndarray:
+    """uint32 bits for each (q_pos, kv_pos) pair.
+
+    ``q_pos [rows, 1]`` and ``kv_pos [1, cols]`` are int32 index grids (global
+    positions, so the mask is invariant to the block decomposition); ``seed``,
+    ``b``, ``h`` are scalars. Returns uint32 [rows, cols].
+    """
+    seed = jnp.asarray(seed).astype(jnp.uint32)
+    b = jnp.asarray(b).astype(jnp.uint32)
+    h = jnp.asarray(h).astype(jnp.uint32)
+    s = (seed * jnp.uint32(_GOLDEN) + b * jnp.uint32(_M3)) ^ (h + jnp.uint32(_GOLDEN))
+    x = (q_pos.astype(jnp.uint32) * jnp.uint32(_M1)
+         + kv_pos.astype(jnp.uint32) * jnp.uint32(_M2) + s)
+    x = _mix(x)
+    x = _mix(x * jnp.uint32(_M3) + jnp.uint32(_GOLDEN))
+    return x
+
+
+def dropout_keep_mask(rate: float, seed, b, h, q_pos, kv_pos) -> jnp.ndarray:
+    """Boolean keep-mask with P(keep) = 1 - rate, reproducible from coordinates."""
+    bits = random_bits(seed, b, h, q_pos, kv_pos)
+    # keep iff bits >= rate * 2^32  (compare in uint32 space)
+    threshold = jnp.uint32(min(int(rate * 4294967296.0), 4294967295))
+    return bits >= threshold

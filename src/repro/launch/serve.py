@@ -1,0 +1,77 @@
+"""Serving launcher: batched prefill + autoregressive decode.
+
+CPU-runnable smoke example:
+  PYTHONPATH=src python -m repro.launch.serve --arch granite_3_2b --smoke \\
+      --batch 4 --prompt-len 64 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.launch.mesh import make_mesh
+from repro.launch.train import parse_mesh
+from repro.runtime.steps import make_serve_steps
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCHS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--mesh", default="")
+    ap.add_argument("--impl", default="xla",
+                    choices=["xla", "pallas", "pallas_interpret", "naive"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (configs.smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    cfg = dataclasses.replace(cfg, dtype=jnp.float32)
+    if not cfg.has_decode:
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode step")
+    mesh = parse_mesh(args.mesh)
+    max_len = args.prompt_len + args.gen
+    arts = make_serve_steps(cfg, mesh=mesh, impl=args.impl, max_len=max_len,
+                            batch=args.batch,
+                            xla_chunk=min(1024, args.prompt_len))
+
+    from repro.models import lm
+    key = jax.random.PRNGKey(args.seed)
+    params, _ = lm.init_params(
+        cfg, key, vocab_pad_to=mesh.shape.get("model", 1) if mesh else 1)
+    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size)
+    caches = arts.cache_init_fn()
+    t0 = time.perf_counter()
+    logits, caches = arts.prefill_fn(params, prompt, None, caches)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+    tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)
+    out_tokens = [np.asarray(tok)]
+    t0 = time.perf_counter()
+    for i in range(args.gen - 1):
+        logits, caches = arts.decode_fn(params, tok, caches,
+                                        jnp.int32(args.prompt_len + i))
+        tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)
+        out_tokens.append(np.asarray(tok))
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+    gen = np.stack(out_tokens, axis=1)
+    print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill*1e3:.1f}ms; "
+          f"decode: {args.gen-1} steps in {t_decode*1e3:.1f}ms "
+          f"({(args.gen-1)*args.batch/max(t_decode,1e-9):.1f} tok/s)")
+    print("generated (first row):", gen[0][:16])
+
+
+if __name__ == "__main__":
+    main()

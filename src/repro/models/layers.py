@@ -1,0 +1,227 @@
+"""Shared model building blocks (pure JAX, param pytrees + logical-axis specs).
+
+Every ``init_*`` returns ``(params, specs)`` where ``specs`` mirrors the params
+pytree with tuples of *logical axis names* per dim. The sharding-rule engine
+(distributed/sharding.py) maps logical names → mesh axes per architecture.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import spark_attention, spark_decode
+
+
+# ---------------------------------------------------------------------------
+# context threaded through every apply function
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Ctx:
+    """Per-call context: mesh/sharding hooks + mode flags + dropout seed."""
+    constrain: Any = None            # fn(x, logical_axes) -> x (or None)
+    impl: str = "xla"                # attention impl
+    deterministic: bool = True       # disables dropout
+    seed: Any = 0                    # traced dropout seed
+    decode: bool = False             # single-token decode step
+    xla_chunk: int = 1024
+    xla_unroll: bool = False         # unroll attention chunk scans (cost pass)
+    decode_write: str = "dus"        # KV write: "dus" | "onehot" (see below)
+    block_q: int = 128
+    block_kv: int = 128
+    acc_dtype: Any = jnp.float32
+    bwd_acc_dtype: Any = jnp.float32
+
+    def c(self, x, *axes):
+        """Apply an activation sharding constraint if a mesh is attached."""
+        if self.constrain is None:
+            return x
+        return self.constrain(x, axes)
+
+
+# ---------------------------------------------------------------------------
+# initialisers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in, d_out, dtype, in_axis="embed", out_axis="mlp",
+               scale=None):
+    scale = (d_in ** -0.5) if scale is None else scale
+    w = (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+    return w, (in_axis, out_axis)
+
+
+def norm_init(dim, dtype):
+    return jnp.ones((dim,), dtype), ("embed",)
+
+
+# ---------------------------------------------------------------------------
+# primitive ops
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def rope(x, positions, *, base: float = 10000.0):
+    """Rotary embedding. x: [B, S, H, D] (D even), positions: [B, S] or [S]."""
+    b, s, h, d = x.shape
+    half = d // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions.astype(jnp.float32)[:, :, None] * freqs[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]          # [B, S, 1, half]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softmax_cross_entropy(logits, labels, vocab_size: int):
+    """Mean CE over all positions. logits [B,S,V] (V may be padded), labels [B,S]."""
+    logits = logits.astype(jnp.float32)
+    if logits.shape[-1] > vocab_size:  # mask vocab padding
+        neg = jnp.full((logits.shape[-1] - vocab_size,), -1e30, jnp.float32)
+        logits = logits.at[..., vocab_size:].set(neg)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model, d_ff, dtype, gated: bool = True):
+    k1, k2 = jax.random.split(key)
+    width = 2 * d_ff if gated else d_ff
+    wi, si = dense_init(k1, d_model, width, dtype, "embed", "mlp")
+    wo, so = dense_init(k2, d_ff, d_model, dtype, "mlp", "embed")
+    return {"wi": wi, "wo": wo}, {"wi": si, "wo": so}
+
+
+def apply_mlp(p, x, ctx: Ctx, *, gated: bool = True):
+    h = x @ p["wi"]
+    h = ctx.c(h, "batch", "seq", "mlp")
+    if gated:
+        g, u = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(h)
+    out = h @ p["wo"]
+    return ctx.c(out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Attention block (the paper's technique lives here)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, dtype):
+    """cfg: ArchConfig-like with num_heads/num_kv_heads/head_dim/d_model/qk_norm."""
+    ks = jax.random.split(key, 4)
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p, s = {}, {}
+    p["wq"], s["wq"] = dense_init(ks[0], d, hq * hd, dtype, "embed", "q_proj")
+    p["wk"], s["wk"] = dense_init(ks[1], d, hkv * hd, dtype, "embed", "kv_proj")
+    p["wv"], s["wv"] = dense_init(ks[2], d, hkv * hd, dtype, "embed", "kv_proj")
+    p["wo"], s["wo"] = dense_init(ks[3], hq * hd, d, dtype, "q_proj", "embed")
+    if cfg.qk_norm:
+        p["q_norm"], s["q_norm"] = jnp.ones((hd,), dtype), ("head_dim",)
+        p["k_norm"], s["k_norm"] = jnp.ones((hd,), dtype), ("head_dim",)
+    return p, s
+
+
+def apply_attention(p, x, ctx: Ctx, cfg, *, positions=None, cache=None,
+                    layer_seed=0):
+    """x: [B, S, d]. Returns (out, new_cache).
+
+    cache (decode/prefill): dict with k/v [B, Hkv, S_max, D] and index scalar.
+    """
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+
+    q = (x @ p["wq"]).reshape(b, s, hq, hd)
+    k = (x @ p["wk"]).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = rope(q, positions)
+    k = rope(k, positions)
+
+    q = ctx.c(q.transpose(0, 2, 1, 3), "batch", "heads", "seq_full", "head_dim")
+    k = ctx.c(k.transpose(0, 2, 1, 3), "batch", "kv_heads", "seq_full", "head_dim")
+    v = ctx.c(v.transpose(0, 2, 1, 3), "batch", "kv_heads", "seq_full", "head_dim")
+
+    new_cache = None
+    if ctx.decode:
+        # Append one token, then flash-decode over the cache. Sliding-window
+        # archs use the cache as a RING buffer of `window` slots: RoPE bakes
+        # absolute positions into K at write time and softmax is permutation-
+        # invariant over keys, so slot order inside the ring is irrelevant and
+        # no window mask is needed (every resident entry is in-window).
+        assert s == 1 and cache is not None
+        idx = cache["index"]
+        cap = cache["k"].shape[2]
+        slot = idx % cap if cfg.attn_window is not None else idx
+        if ctx.decode_write == "onehot":
+            # Elementwise ring write: dynamic_update_slice at a traced index
+            # on a sharded seq dim forces GSPMD into "involuntary full
+            # rematerialization" (replicate + repartition the whole cache per
+            # token — caught by the v0 dry-run). A one-hot select is
+            # elementwise on the sharded dim → stays local on every shard.
+            hot = (jnp.arange(cap, dtype=jnp.int32) == slot)[None, None, :, None]
+            ck = jnp.where(hot, k.astype(cache["k"].dtype), cache["k"])
+            cv = jnp.where(hot, v.astype(cache["v"].dtype), cache["v"])
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, slot, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, slot, 0))
+        ck = ctx.c(ck, "batch", "kv_heads", "kv_cache_seq", "head_dim")
+        cv = ctx.c(cv, "batch", "kv_heads", "kv_cache_seq", "head_dim")
+        kv_len = jnp.full((b,), jnp.minimum(idx + 1, cap), jnp.int32)
+        o = spark_decode(q[:, :, 0, :], ck, cv, impl=ctx.impl, kv_len=kv_len,
+                         window=None, block_kv=ctx.block_kv)
+        o = o[:, :, None, :]
+        new_cache = {"k": ck, "v": cv, "index": idx + 1}
+    else:
+        if cache is not None:  # prefill (from position 0): fill the cache
+            cap = cache["k"].shape[2]
+            kc = k.astype(cache["k"].dtype)
+            vc = v.astype(cache["v"].dtype)
+            if s >= cap:  # windowed ring: keep the last `cap` tokens, by-slot
+                shift = (s - cap) % cap
+                kc = jnp.roll(kc[:, :, s - cap:], shift, axis=2)
+                vc = jnp.roll(vc[:, :, s - cap:], shift, axis=2)
+                ck, cv = kc, vc
+            else:
+                ck = jax.lax.dynamic_update_slice(cache["k"], kc, (0, 0, 0, 0))
+                cv = jax.lax.dynamic_update_slice(cache["v"], vc, (0, 0, 0, 0))
+            new_cache = {"k": ck, "v": cv, "index": cache["index"] + s}
+        drop = 0.0 if ctx.deterministic else cfg.dropout_rate
+        o = spark_attention(q, k, v, impl=ctx.impl, seed=ctx.seed + layer_seed,
+                            causal=cfg.causal, window=cfg.attn_window,
+                            dropout_rate=drop, acc_dtype=ctx.acc_dtype,
+                            bwd_acc_dtype=ctx.bwd_acc_dtype,
+                            block_q=ctx.block_q, block_kv=ctx.block_kv,
+                            xla_chunk=ctx.xla_chunk, xla_unroll=ctx.xla_unroll)
+
+    o = ctx.c(o, "batch", "heads", "seq_full", "head_dim")
+    out = o.transpose(0, 2, 1, 3).reshape(b, s, hq * hd) @ p["wo"]
+    return ctx.c(out, "batch", "seq", "embed"), new_cache
+
+
+def init_attn_cache(cfg, batch, max_len, dtype):
+    shape = (batch, cfg.num_kv_heads, max_len, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "index": jnp.int32(0)}

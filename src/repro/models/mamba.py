@@ -1,0 +1,135 @@
+"""Mamba-1 selective-state-space mixer (falcon-mamba-7b, arXiv:2410.05355).
+
+Attention-free: SparkAttention is inapplicable (DESIGN.md §Arch-applicability);
+the arch is supported by the framework with this pure-JAX mixer. The selective
+scan h_t = Ā_t ⊙ h_{t-1} + B̄_t x_t is linear in h → associative scan over the
+sequence for train/prefill, single-step update for decode.
+
+State per layer: h [B, d_inner, N] (N = ssm_state = 16) + conv tail.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_mamba(key, cfg, dtype):
+    mc = cfg.mamba
+    d, di, n, dt_rank = cfg.d_model, mc.d_inner, mc.ssm_state, mc.dt_rank
+    ks = jax.random.split(key, 8)
+    p, s = {}, {}
+    p["in_proj"], s["in_proj"] = layers.dense_init(ks[0], d, 2 * di, dtype,
+                                                   "embed", "rnn")
+    p["conv"] = (jax.random.normal(ks[1], (mc.conv_kernel, di), jnp.float32)
+                 * 0.1).astype(dtype)
+    s["conv"] = (None, "rnn")
+    p["w_bc"], s["w_bc"] = layers.dense_init(ks[2], di, 2 * n, dtype,
+                                             "rnn", "state")
+    p["w_dt1"], s["w_dt1"] = layers.dense_init(ks[3], di, dt_rank, dtype,
+                                               "rnn", None)
+    p["w_dt2"], s["w_dt2"] = layers.dense_init(ks[4], dt_rank, di, dtype,
+                                               None, "rnn")
+    p["dt_bias"] = jnp.zeros((di,), jnp.float32)
+    s["dt_bias"] = ("rnn",)
+    # A init: -[1..N] broadcast per channel (S4D-real init)
+    p["A_log"] = jnp.broadcast_to(jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)),
+                                  (di, n)).copy()
+    s["A_log"] = ("rnn", "state")
+    p["D"] = jnp.ones((di,), jnp.float32)
+    s["D"] = ("rnn",)
+    p["out_proj"], s["out_proj"] = layers.dense_init(ks[5], di, d, dtype,
+                                                     "rnn", "embed")
+    return p, s
+
+
+def _ssm_scan(u, dt, B, C, A, D, *, chunk: int = 256):
+    """u,dt: [B,S,Di]; B,C: [B,S,N]; A: [Di,N]; D: [Di] → y [B,S,Di] (f32).
+
+    Chunked: a flat associative scan would materialise the [B,S,Di,N] f32
+    discretised operands (34 GB/layer for falcon-mamba at 4k×16 local batch —
+    caught by the dry-run memory pass). Instead we scan sequentially over
+    S/chunk chunks carrying only h [B,Di,N], with an associative scan *inside*
+    each chunk — the TPU-friendly shape a fused Mamba kernel would use, with
+    peak memory [B,chunk,Di,N].
+    """
+    bsz, s, di = u.shape
+    n = A.shape[1]
+    if s % chunk != 0:
+        chunk = s
+    n_chunks = s // chunk
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    def chunk_body(h_prev, inputs):
+        u_c, dt_c, b_c, c_c = inputs                 # [B,chunk,...]
+        a_bar = jnp.exp(dt_c[..., None] * A)         # [B,chunk,Di,N]
+        bx = (dt_c * u_c)[..., None] * b_c[:, :, None, :]
+        a_cum, h_in = jax.lax.associative_scan(combine, (a_bar, bx), axis=1)
+        # fold in the carried state: h_t = a_{1..t}·h_prev + h_in
+        h = h_in + a_cum * h_prev[:, None]
+        y_c = jnp.einsum("bsdn,bsn->bsd", h, c_c)
+        return h[:, -1], y_c
+
+    split = lambda x: x.reshape(bsz, n_chunks, chunk, *x.shape[2:]
+                                ).transpose(1, 0, 2, *range(3, x.ndim + 1))
+    h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    h_last, yc = jax.lax.scan(chunk_body, h0,
+                              (split(u), split(dt), split(B), split(C)))
+    y = yc.transpose(1, 0, 2, 3).reshape(bsz, s, di)
+    return y + D * u, h_last
+
+
+def _ssm_step(u, dt, B, C, A, D, h_prev):
+    """Single decode step. u,dt: [B,Di]; B,C: [B,N]; h_prev [B,Di,N]."""
+    a_bar = jnp.exp(dt[..., None] * A)
+    h = a_bar * h_prev + (dt * u)[..., None] * B[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, C) + D * u
+    return y, h
+
+
+def apply_mamba(p, x, ctx: layers.Ctx, cfg, *, cache=None):
+    """x: [B,S,d]. cache (decode): {'h': [B,Di,N] f32, 'conv': [B,K-1,Di]}."""
+    from repro.models.rglru import _conv1d_causal
+    b, s, d = x.shape
+    h_in = x @ p["in_proj"]
+    h_in = ctx.c(h_in, "batch", "seq", "rnn")
+    u, z = jnp.split(h_in, 2, axis=-1)
+
+    conv_state = cache["conv"] if cache is not None else None
+    u, new_conv = _conv1d_causal(u, p["conv"], conv_state)
+    u = jax.nn.silu(u).astype(jnp.float32)
+
+    bc = (u.astype(x.dtype) @ p["w_bc"]).astype(jnp.float32)
+    Bm, Cm = jnp.split(bc, 2, axis=-1)                       # [B,S,N] each
+    dt = jax.nn.softplus(
+        (u.astype(x.dtype) @ p["w_dt1"] @ p["w_dt2"]).astype(jnp.float32)
+        + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    new_cache = None
+    if ctx.decode:
+        assert s == 1 and cache is not None
+        y, h_new = _ssm_step(u[:, 0], dt[:, 0], Bm[:, 0], Cm[:, 0], A, p["D"],
+                             cache["h"])
+        new_cache = {"h": h_new, "conv": new_conv}
+        y = y[:, None, :]
+    else:
+        y, h_last = _ssm_scan(u, dt, Bm, Cm, A, p["D"])
+        if cache is not None:
+            new_cache = {"h": h_last, "conv": new_conv}
+    y = ctx.c(y.astype(x.dtype), "batch", "seq", "rnn")
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return ctx.c(out, "batch", "seq", "embed"), new_cache
+
+
+def init_mamba_cache(cfg, batch):
+    mc = cfg.mamba
+    return {"h": jnp.zeros((batch, mc.d_inner, mc.ssm_state), jnp.float32),
+            "conv": jnp.zeros((batch, mc.conv_kernel - 1, mc.d_inner),
+                              jnp.float32)}

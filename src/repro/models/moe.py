@@ -1,0 +1,119 @@
+"""Mixture-of-Experts FFN with GShard-style grouped einsum dispatch.
+
+Expert-parallel layout: tokens are grouped (``group_size`` per arch config),
+groups shard over the data axis, experts shard over the model axis. The
+dispatch/combine einsums are the standard GShard/Switch formulation — fully
+GSPMD-shardable, capacity-factor token dropping, dropped-fraction surfaced as a
+metric. ``shared_experts`` (deepseek-moe) run as a dense MLP on every token.
+
+The dense-loop oracle (`moe_reference`) is used by tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_moe(key, cfg, dtype):
+    m = cfg.moe
+    ks = jax.random.split(key, 4)
+    d, f, e = cfg.d_model, m.d_ff_expert, m.num_experts
+    p, s = {}, {}
+    p["router"], s["router"] = layers.dense_init(
+        ks[0], d, e, jnp.float32, "embed", "experts", scale=d ** -0.5)
+    wi = jax.random.normal(ks[1], (e, d, 2 * f), jnp.float32) * (d ** -0.5)
+    wo = jax.random.normal(ks[2], (e, f, d), jnp.float32) * (f ** -0.5)
+    p["wi"], s["wi"] = wi.astype(dtype), ("experts", "embed", "expert_mlp")
+    p["wo"], s["wo"] = wo.astype(dtype), ("experts", "expert_mlp", "embed")
+    if m.num_shared_experts:
+        p["shared"], s["shared"] = layers.init_mlp(
+            ks[3], d, m.num_shared_experts * f, dtype, gated=True)
+    return p, s
+
+
+def _capacity(group_size: int, num_experts: int, top_k: int, factor: float) -> int:
+    c = int(group_size * top_k * factor / num_experts)
+    return max(8, (c + 7) // 8 * 8)  # 8-aligned for TPU sublanes
+
+
+def apply_moe(p, x, ctx: layers.Ctx, cfg):
+    """x: [B, S, d] -> [B, S, d]. Router in f32 for stable softmax."""
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.num_experts, m.top_k
+    tokens = x.reshape(b * s, d)
+    n_tok = tokens.shape[0]
+    g_sz = min(m.group_size, n_tok)
+    while n_tok % g_sz:  # largest divisor ≤ configured group size
+        g_sz -= 1
+    n_g = n_tok // g_sz
+    xg = tokens.reshape(n_g, g_sz, d)
+    xg = ctx.c(xg, "moe_groups", None, "embed")
+
+    logits = (xg.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # [G, S, E]
+    gate_vals, idx = jax.lax.top_k(probs, k)                 # [G, S, k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    cap = _capacity(g_sz, e, k, m.capacity_factor)
+    onehot_e = jax.nn.one_hot(idx, e, dtype=jnp.float32)     # [G, S, k, E]
+    # position of each (token, choice) in its expert's queue, in token order
+    # (priority to earlier tokens, then lower-rank choices — GShard semantics)
+    flat = onehot_e.reshape(n_g, g_sz * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                    # [G, S*k, E]
+    pos = jnp.sum(pos.reshape(n_g, g_sz, k, e) * onehot_e, axis=-1)  # [G, S, k]
+    keep = pos < cap
+    gate_vals = gate_vals * keep                              # drop over-capacity
+    onehot_c = jax.nn.one_hot(pos.astype(jnp.int32), cap,
+                              dtype=jnp.float32) * keep[..., None]
+
+    # dispatch [G, S, E, C] — contracted immediately by the einsums below
+    dispatch = jnp.einsum("gske,gskc->gsec", onehot_e, onehot_c)
+    combine = jnp.einsum("gsk,gske,gskc->gsec", gate_vals, onehot_e, onehot_c)
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch.astype(x.dtype), xg)
+    xe = ctx.c(xe, "moe_groups", "experts", None, "embed")
+    h = jnp.einsum("gecd,edf->gecf", xe, p["wi"])
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate) * up
+    h = ctx.c(h, "moe_groups", "experts", None, "expert_mlp")
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wo"])
+    ye = ctx.c(ye, "moe_groups", "experts", None, "embed")
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), ye)
+
+    out = out.reshape(b, s, d)
+    if m.num_shared_experts:
+        out = out + layers.apply_mlp(p["shared"], x, ctx, gated=True)
+    # aux metrics: load-balance loss (Switch) + dropped fraction
+    density = jnp.mean(onehot_e.sum(2), axis=1)              # [G, E] token frac
+    router_mean = jnp.mean(probs, axis=1)                    # [G, E]
+    aux_loss = e * jnp.mean(jnp.sum(density * router_mean, axis=-1))
+    dropped = 1.0 - jnp.sum(keep) / (n_g * g_sz * k)
+    return ctx.c(out, "batch", "seq", "embed"), {"moe_aux": aux_loss,
+                                                 "moe_dropped": dropped}
+
+
+def moe_reference(p, x, cfg):
+    """Dense per-expert loop oracle (no capacity drop) for tiny test shapes."""
+    m = cfg.moe
+    b, s, d = x.shape
+    tokens = x.reshape(b * s, d).astype(jnp.float32)
+    logits = tokens @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, m.top_k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+    out = jnp.zeros_like(tokens)
+    for ex in range(m.num_experts):
+        hi = tokens @ p["wi"][ex].astype(jnp.float32)
+        g, u = jnp.split(hi, 2, axis=-1)
+        y = (jax.nn.silu(g) * u) @ p["wo"][ex].astype(jnp.float32)
+        w = jnp.sum(jnp.where(idx == ex, gate_vals, 0.0), axis=-1)
+        out = out + w[:, None] * y
+    out = out.reshape(b, s, d).astype(x.dtype)
+    if m.num_shared_experts:
+        ctx = layers.Ctx()
+        out = out + layers.apply_mlp(p["shared"], x, ctx, gated=True)
+    return out

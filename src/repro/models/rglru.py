@@ -1,0 +1,115 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The recurrence  h_t = a_t ⊙ h_{t-1} + √(1-a_t²) ⊙ (i_t ⊙ x_t)  is a linear
+(elementwise, gated) scan — SparkAttention is inapplicable here (no QKᵀ /
+softmax), so this mixer is pure JAX (DESIGN.md §Arch-applicability). Training
+uses an associative scan over the sequence; decode is a single state update.
+
+Block layout (Griffin recurrent block):
+  x → [linear → conv1d(4) → RG-LRU]  ⊙  [linear → gelu]  → linear out
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+_C = 8.0  # Griffin's fixed exponent scale for a_t
+
+
+def init_rglru(key, cfg, dtype):
+    d, dr = cfg.d_model, cfg.rglru.d_rnn
+    ks = jax.random.split(key, 7)
+    p, s = {}, {}
+    p["wx"], s["wx"] = layers.dense_init(ks[0], d, dr, dtype, "embed", "rnn")
+    p["wg"], s["wg"] = layers.dense_init(ks[1], d, dr, dtype, "embed", "rnn")
+    p["wo"], s["wo"] = layers.dense_init(ks[2], dr, d, dtype, "rnn", "embed")
+    # conv1d over time, kernel 4, per-channel (depthwise)
+    p["conv"] = (jax.random.normal(ks[3], (4, dr), jnp.float32) * 0.1).astype(dtype)
+    s["conv"] = (None, "rnn")
+    # gates
+    p["w_inp"], s["w_inp"] = layers.dense_init(ks[4], dr, dr, dtype, "rnn", "rnn")
+    p["w_rec"], s["w_rec"] = layers.dense_init(ks[5], dr, dr, dtype, "rnn", "rnn")
+    # Λ init so the retention a_t = exp(−c·r·softplus(Λ)) hits a ∈ (0.9,0.999)
+    # at r=1 (Griffin's a_t = a^{c·r} with a = exp(−softplus(Λ)); softplus(Λ)
+    # must equal −log(a)/c, so Λ = softplus⁻¹(−log a / c)).
+    lam = jax.random.uniform(ks[6], (dr,), jnp.float32, 0.9, 0.999)
+    target = -jnp.log(lam) / _C
+    p["lambda"] = jnp.log(jnp.expm1(target))      # inverse softplus
+    s["lambda"] = ("rnn",)
+    return p, s
+
+
+def _conv1d_causal(x, w, state=None):
+    """Depthwise causal conv over time. x [B,S,D], w [K,D].
+
+    state (decode): [B, K-1, D] previous inputs; returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):]
+    return y, new_state
+
+
+def _rglru_scan(x, r, i, lam):
+    """x,r,i: [B,S,D] f32. Returns h [B,S,D] via associative scan."""
+    log_a = -_C * jax.nn.softplus(lam) * r          # log a_t  (a_t ∈ (0,1))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_seq, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h
+
+
+def _rglru_step(x, r, i, lam, h_prev):
+    log_a = -_C * jax.nn.softplus(lam) * r
+    a = jnp.exp(log_a)
+    h = a * h_prev + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x)
+    return h
+
+
+def apply_rglru(p, x, ctx: layers.Ctx, cfg, *, cache=None):
+    """x: [B, S, d]. cache (decode): {'h': [B,Dr] f32, 'conv': [B,3,Dr]}."""
+    b, s, d = x.shape
+    xr = x @ p["wx"]                                  # recurrence branch
+    xr = ctx.c(xr, "batch", "seq", "rnn")
+    gate = jax.nn.gelu(x @ p["wg"])                   # gate branch
+    gate = ctx.c(gate, "batch", "seq", "rnn")
+
+    conv_state = cache["conv"] if cache is not None else None
+    xr, new_conv = _conv1d_causal(xr, p["conv"], conv_state)
+
+    xf = xr.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_rec"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["w_inp"].astype(jnp.float32))
+
+    new_cache = None
+    if ctx.decode:
+        assert s == 1 and cache is not None
+        h = _rglru_step(xf[:, 0], r[:, 0], i[:, 0], p["lambda"], cache["h"])
+        new_cache = {"h": h, "conv": new_conv}
+        h = h[:, None, :]
+    else:
+        h = _rglru_scan(xf, r, i, p["lambda"])
+        if cache is not None:  # prefill: persist final state
+            new_cache = {"h": h[:, -1], "conv": new_conv}
+    h = ctx.c(h.astype(x.dtype), "batch", "seq", "rnn")
+    out = (h * gate) @ p["wo"]
+    return ctx.c(out, "batch", "seq", "embed"), new_cache
+
+
+def init_rglru_cache(cfg, batch):
+    dr = cfg.rglru.d_rnn
+    return {"h": jnp.zeros((batch, dr), jnp.float32),
+            "conv": jnp.zeros((batch, 3, dr), jnp.float32)}

@@ -1,0 +1,7 @@
+from repro.optim.adamw import (AdamWConfig, AdamWState, adamw_init,
+                               adamw_update, clip_by_global_norm, global_norm)
+from repro.optim.schedule import cosine_schedule, linear_warmup
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+           "clip_by_global_norm", "global_norm", "cosine_schedule",
+           "linear_warmup"]

@@ -1,0 +1,81 @@
+"""AdamW with f32 master state over (possibly bf16) params — ZeRO-friendly.
+
+The optimizer state mirrors the param pytree, so whatever sharding the rules
+engine assigns to a param automatically applies to its m/v/master slots
+(ZeRO-1 falls out of FSDP param sharding for free).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    keep_master: bool = True  # f32 master copy when params are bf16
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+    master: Any  # f32 params (or None when keep_master=False)
+
+
+def adamw_init(params, cfg: AdamWConfig) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    # explicit copy: when params are already f32, astype would alias the param
+    # buffer and break donation (double-donate) in the jitted step.
+    master = (jax.tree.map(lambda p: jnp.array(p, jnp.float32, copy=True),
+                           params)
+              if cfg.keep_master else None)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros), master=master)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: AdamWConfig, lr=None):
+    """Returns (new_params, new_state, metrics). lr may be a traced scalar."""
+    lr = cfg.lr if lr is None else lr
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                         state.m, grads)
+    new_v = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                         state.v, grads)
+    base = state.master if cfg.keep_master else params
+
+    def upd(p, m, v):
+        pf = p.astype(jnp.float32)
+        u = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps) + cfg.weight_decay * pf
+        return pf - lr * u
+
+    new_master = jax.tree.map(upd, base, new_m, new_v)
+    new_params = jax.tree.map(
+        lambda nm, p: nm.astype(p.dtype), new_master, params)
+    new_state = AdamWState(step=step, m=new_m, v=new_v,
+                           master=new_master if cfg.keep_master else None)
+    return new_params, new_state, {"grad_norm": gnorm}

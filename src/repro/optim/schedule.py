@@ -1,0 +1,17 @@
+"""Learning-rate schedules (pure functions of a traced step)."""
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup_steps: int, peak: float):
+    return peak * jnp.minimum(1.0, (step + 1) / max(1, warmup_steps))
+
+
+def cosine_schedule(step, warmup_steps: int, total_steps: int, peak: float,
+                    floor_frac: float = 0.1):
+    warm = linear_warmup(step, warmup_steps, peak)
+    frac = jnp.clip((step - warmup_steps) / max(1, total_steps - warmup_steps),
+                    0.0, 1.0)
+    cos = peak * (floor_frac + (1 - floor_frac) * 0.5 *
+                  (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup_steps, warm, cos)

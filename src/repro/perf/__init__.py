@@ -1,0 +1,6 @@
+from repro.perf.hlo_analysis import CollectiveStats, collective_stats
+from repro.perf.roofline import (HBM_BW, HBM_PER_CHIP, ICI_LINK_BW, PEAK_FLOPS,
+                                 Roofline, build, model_flops_for)
+
+__all__ = ["CollectiveStats", "collective_stats", "HBM_BW", "HBM_PER_CHIP",
+           "ICI_LINK_BW", "PEAK_FLOPS", "Roofline", "build", "model_flops_for"]

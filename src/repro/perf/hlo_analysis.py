@@ -1,0 +1,103 @@
+"""Collective-traffic extraction from compiled HLO text.
+
+``cost_analysis()`` has no collective-bytes entry, so we parse the compiled
+module: for every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute we take the result (tuple) shapes and cost them with the
+standard ring-algorithm byte counts per participating device:
+
+    all-reduce       2·S·(n−1)/n      (reduce-scatter + all-gather ring)
+    all-gather       S·(n−1)/n        (S = full gathered size)
+    reduce-scatter   S·(n−1)          (S = scattered shard size; input S·n)
+    all-to-all       S·(n−1)/n
+    collective-permute S
+
+n = replica-group size, parsed from either the explicit ``{{0,1,..},..}`` or
+the iota ``[g,n]<=[N]`` form. Bytes are per-device; the roofline divides by
+per-link bandwidth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:%?[\w.\-]+\s*=\s*)?(\(?[\w\[\],\s{}\/]*\)?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?(?:\.\d+)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    count_by_kind: Dict[str, int]
+    total_bytes: float
+    ops: List[dict]
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [num_groups, group_size]<=[N]
+    return default
+
+
+def collective_stats(hlo_text: str, *, default_group: int = 1,
+                     skip_done: bool = True) -> CollectiveStats:
+    bytes_by_kind: Dict[str, float] = defaultdict(float)
+    count_by_kind: Dict[str, int] = defaultdict(int)
+    ops = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        if skip_done and ("-done" in line.split("(")[0]):
+            continue  # async pair: count the -start only
+        type_str, kind = m.group(1), m.group(2)
+        size = _shape_bytes(type_str)
+        n = max(2, _group_size(line, default_group))
+        if kind == "all-reduce":
+            dev_bytes = 2.0 * size * (n - 1) / n
+        elif kind == "all-gather":
+            dev_bytes = size * (n - 1) / n
+        elif kind == "reduce-scatter":
+            dev_bytes = size * (n - 1)
+        elif kind == "all-to-all":
+            dev_bytes = size * (n - 1) / n
+        else:  # collective-permute
+            dev_bytes = size
+        bytes_by_kind[kind] += dev_bytes
+        count_by_kind[kind] += 1
+        ops.append({"kind": kind, "result_bytes": size, "group": n,
+                    "device_bytes": dev_bytes})
+    return CollectiveStats(dict(bytes_by_kind), dict(count_by_kind),
+                           sum(bytes_by_kind.values()), ops)

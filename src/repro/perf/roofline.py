@@ -1,0 +1,102 @@
+"""Three-term roofline model for TPU v5e, fed by the dry-run artifacts.
+
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+    memory     = HLO_bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_BW
+
+plus MODEL_FLOPS = 6·N·D (train) / 2·N·D (fwd-only) and the useful-compute
+ratio MODEL_FLOPS / (HLO_FLOPs · chips), which exposes remat/dispatch waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+# --- TPU v5e hardware constants (per chip) --------------------------------
+PEAK_FLOPS = 197e12        # bf16 FLOP/s
+HBM_BW = 819e9             # bytes/s
+ICI_LINK_BW = 50e9         # bytes/s per link (prescribed ~50 GB/s/link)
+HBM_PER_CHIP = 16e9        # v5e HBM capacity
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_per_dev: float
+    hlo_bytes_per_dev: float        # XLA bytes-accessed (fusion-blind upper bound)
+    mem_bytes_model: float          # compulsory-traffic model (roofline term)
+    coll_bytes_per_dev: float
+    chips: int
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Ideal-overlap model: the step takes max(terms)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_compute_ratio(self) -> float:
+        total = self.hlo_flops_per_dev * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """MODEL_FLOPS-based utilisation at the roofline-ideal step time."""
+        t = self.step_time_s
+        if t == 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * t)
+
+    def as_dict(self) -> Dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "bound": self.bound,
+            "step_time_s": self.step_time_s, "mfu": self.mfu,
+            "model_flops": self.model_flops,
+            "useful_compute_ratio": self.useful_compute_ratio,
+            "hlo_flops_per_dev": self.hlo_flops_per_dev,
+            "hlo_bytes_per_dev_upper_bound": self.hlo_bytes_per_dev,
+            "mem_bytes_model": self.mem_bytes_model,
+            "coll_bytes_per_dev": self.coll_bytes_per_dev,
+            "chips": self.chips,
+        }
+
+
+def model_flops_for(cfg, shape, *, step_kind: str) -> float:
+    """6·N·D for train, 2·N·D for fwd-only; MoE uses N_active. Decode D =
+    global_batch tokens (one step)."""
+    n = cfg.active_param_count() if cfg.moe is not None else cfg.param_count()
+    if step_kind == "train":
+        d_tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * d_tokens
+    if step_kind == "prefill":
+        d_tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * d_tokens
+    # decode: one token per sequence per step
+    return 2.0 * n * shape.global_batch
+
+
+def build(cfg, shape, *, step_kind: str, chips: int, hlo_flops_per_dev: float,
+          hlo_bytes_per_dev: float, coll_bytes_per_dev: float,
+          mem_bytes_model: float = 0.0) -> Roofline:
+    mem = mem_bytes_model if mem_bytes_model > 0 else hlo_bytes_per_dev
+    return Roofline(
+        compute_s=hlo_flops_per_dev / PEAK_FLOPS,
+        memory_s=mem / HBM_BW,
+        collective_s=coll_bytes_per_dev / ICI_LINK_BW,
+        model_flops=model_flops_for(cfg, shape, step_kind=step_kind),
+        hlo_flops_per_dev=hlo_flops_per_dev,
+        hlo_bytes_per_dev=hlo_bytes_per_dev,
+        mem_bytes_model=mem,
+        coll_bytes_per_dev=coll_bytes_per_dev,
+        chips=chips,
+    )

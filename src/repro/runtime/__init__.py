@@ -1,0 +1,6 @@
+from repro.runtime.steps import (ServeArtifacts, TrainArtifacts,
+                                 make_serve_steps, make_train_step)
+from repro.runtime.trainer import StragglerMonitor, Trainer, TrainerConfig
+
+__all__ = ["ServeArtifacts", "TrainArtifacts", "make_serve_steps",
+           "make_train_step", "StragglerMonitor", "Trainer", "TrainerConfig"]

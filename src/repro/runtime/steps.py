@@ -1,0 +1,182 @@
+"""jit-compiled train / prefill / decode steps, mesh-aware.
+
+``make_train_step`` / ``make_serve_steps`` return jitted callables with
+in/out shardings derived from the sharding-rule engine; with ``mesh=None``
+they degrade to single-device functions (smoke tests, examples).
+
+These builders are the single source for the launcher, the dry-run, the
+benchmarks and the distributed tests — what the dry-run compiles is exactly
+what the trainer runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import ShardingRules, default_rules
+from repro.models import lm
+from repro.models.layers import Ctx
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+
+
+def _make_ctx(cfg, rules: Optional[ShardingRules], impl: str, seed,
+              deterministic: bool, decode: bool = False,
+              xla_chunk: int = 1024, xla_unroll: bool = False,
+              decode_write: str = "dus") -> Ctx:
+    return Ctx(constrain=rules.constrain if rules is not None else None,
+               impl=impl, deterministic=deterministic, seed=seed,
+               decode=decode, xla_chunk=xla_chunk, xla_unroll=xla_unroll,
+               decode_write=decode_write)
+
+
+@dataclasses.dataclass
+class TrainArtifacts:
+    step_fn: Any            # (params, opt_state, batch, step) → (p, o, metrics)
+    init_fn: Any            # key → (params, opt_state)
+    shardings: Any          # dict: params/opt_state/batch NamedShardings
+    rules: Optional[ShardingRules]
+
+
+def make_train_step(cfg, *, mesh=None, opt: AdamWConfig = AdamWConfig(),
+                    impl: str = "xla", total_steps: int = 10000,
+                    warmup_steps: int = 100, microbatch: Optional[int] = None,
+                    aux_weight: float = 0.01, xla_chunk: int = 1024,
+                    xla_unroll: bool = False,
+                    donate: bool = True) -> TrainArtifacts:
+    rules = default_rules(mesh, cfg) if mesh is not None else None
+    vocab_pad = mesh.shape.get("model", 1) if mesh is not None else 1
+
+    def init_fn(key):
+        params, specs = lm.init_params(cfg, key, vocab_pad_to=vocab_pad)
+        opt_state = adamw_init(params, opt)
+        return params, opt_state, specs
+
+    def loss_of(params, batch, seed):
+        ctx = _make_ctx(cfg, rules, impl, seed,
+                        deterministic=(cfg.dropout_rate == 0.0),
+                        xla_chunk=xla_chunk, xla_unroll=xla_unroll)
+        return lm.loss_fn(cfg, params, batch, ctx, aux_weight=aux_weight)
+
+    def train_step(params, opt_state, batch, step):
+        seed = (step.astype(jnp.uint32) * jnp.uint32(2654435761)
+                ).astype(jnp.int32)  # per-step dropout stream
+        if microbatch is None:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch, seed)
+        else:
+            # gradient accumulation over microbatches (PP-style scheduling
+            # substrate): scan over batch splits, mean the grads.
+            n_micro = batch["labels"].shape[0] // microbatch
+
+            def split(x):
+                return x.reshape((n_micro, microbatch) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(loss_of, has_aux=True)(
+                    params, mb, seed)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), m
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g_sum, l_sum), ms = jax.lax.scan(acc, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / n_micro, g_sum)
+            loss = l_sum / n_micro
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+        lr = cosine_schedule(step, warmup_steps, total_steps, opt.lr)
+        params, opt_state, om = adamw_update(grads, opt_state, params, opt)
+        metrics = dict(metrics, **om, lr=lr, loss=loss)
+        return params, opt_state, metrics
+
+    shardings = None
+    if mesh is not None:
+        params_shape, specs = lm.abstract_params(cfg, vocab_pad_to=vocab_pad)
+        p_shard = rules.tree_shardings(params_shape, specs)
+        o_shard = _opt_shardings(p_shard, opt)
+        b_shard = {
+            "tokens": rules.sharding_for(("batch", None), None),
+            "labels": rules.sharding_for(("batch", None), None),
+            "embeds": rules.sharding_for(("batch", None, None), None),
+        }
+        repl = NamedSharding(mesh, P())
+        step_fn = jax.jit(
+            train_step,
+            in_shardings=(p_shard, o_shard, None, repl),
+            out_shardings=(p_shard, o_shard, repl),
+            donate_argnums=(0, 1) if donate else ())
+        shardings = {"params": p_shard, "opt": o_shard, "batch": b_shard}
+    else:
+        step_fn = jax.jit(train_step, donate_argnums=(0, 1) if donate else ())
+
+    return TrainArtifacts(step_fn=step_fn, init_fn=init_fn,
+                          shardings=shardings, rules=rules)
+
+
+def _opt_shardings(p_shard, opt: AdamWConfig):
+    from repro.optim.adamw import AdamWState
+    none_spec = None
+    return AdamWState(
+        step=NamedSharding(list(jax.tree.leaves(p_shard))[0].mesh, P()),
+        m=p_shard, v=p_shard,
+        master=p_shard if opt.keep_master else None)
+
+
+@dataclasses.dataclass
+class ServeArtifacts:
+    prefill_fn: Any
+    decode_fn: Any
+    cache_init_fn: Any
+    rules: Optional[ShardingRules]          # prefill/param rules
+    rules_decode: Optional[ShardingRules] = None
+
+
+def make_serve_steps(cfg, *, mesh=None, impl: str = "xla", max_len: int = 2048,
+                     batch: int = 1, xla_chunk: int = 1024,
+                     xla_unroll: bool = False,
+                     decode_write: str = "dus") -> ServeArtifacts:
+    # prefill and decode get DIFFERENT activation rules: prefill behaves
+    # like a forward train pass (FSDP weight gathers amortise over the whole
+    # sequence); decode must avoid per-token weight/cache gathers.
+    rules = default_rules(mesh, cfg, serve=True) if mesh is not None else None
+    rules_dec = (default_rules(mesh, cfg, serve=True, decode=True)
+                 if mesh is not None else None)
+    vocab_pad = mesh.shape.get("model", 1) if mesh is not None else 1
+
+    def cache_init():
+        return lm.init_cache(cfg, batch, max_len)
+
+    def prefill_fn(params, tokens, embeds, caches):
+        # positional-only: jit in_shardings forbids kwargs
+        ctx = _make_ctx(cfg, rules, impl, 0, True, xla_chunk=xla_chunk,
+                        xla_unroll=xla_unroll)
+        return lm.prefill(cfg, params, ctx, tokens=tokens, embeds=embeds,
+                          caches=caches)
+
+    def decode_fn(params, token, caches, position):
+        ctx = _make_ctx(cfg, rules_dec, impl, 0, True, xla_chunk=xla_chunk,
+                        decode_write=decode_write)
+        return lm.decode_step(cfg, params, ctx, token, caches, position)
+
+    if mesh is not None:
+        params_shape, specs = lm.abstract_params(cfg, vocab_pad_to=vocab_pad)
+        p_shard = rules.tree_shardings(params_shape, specs)
+        prefill_jit = jax.jit(prefill_fn,
+                              in_shardings=(p_shard, None, None, None))
+        # the KV cache is donated: decode updates it in place (halves the
+        # serving memory footprint — caches are the dominant decode tensor)
+        decode_jit = jax.jit(decode_fn, donate_argnums=(2,))
+        return ServeArtifacts(prefill_fn=prefill_jit, decode_fn=decode_jit,
+                              cache_init_fn=cache_init, rules=rules,
+                              rules_decode=rules_dec)
+    return ServeArtifacts(prefill_fn=jax.jit(prefill_fn),
+                          decode_fn=jax.jit(decode_fn, donate_argnums=(2,)),
+                          cache_init_fn=cache_init, rules=rules,
+                          rules_decode=rules_dec)

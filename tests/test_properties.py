@@ -1,0 +1,122 @@
+"""Hypothesis property tests for the system's core invariants.
+
+The online-softmax state algebra (core/online_softmax.py) is the single piece
+of math every execution path shares — kernel, XLA fallback, distributed decode
+merge. If its invariants hold, block decomposition is sound everywhere.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import online_softmax as osm
+from repro.kernels import rng
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _softmax_weighted(s, v):
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return p @ v
+
+
+@st.composite
+def score_blocks(draw):
+    rows = draw(st.integers(2, 8))
+    cols = draw(st.integers(2, 16))
+    n_blocks = draw(st.integers(1, 4))
+    d = draw(st.integers(1, 8))
+    seed = draw(st.integers(0, 2**31 - 1))
+    r = np.random.RandomState(seed)
+    scale = draw(st.floats(0.1, 30.0))  # exercise large-magnitude scores
+    s = (r.randn(rows, n_blocks * cols) * scale).astype(np.float32)
+    v = r.randn(n_blocks * cols, d).astype(np.float32)
+    return s, v, cols
+
+
+@given(score_blocks())
+def test_blocked_equals_full_softmax(data):
+    """Folding blocks sequentially == softmax over the concatenation (Eq. 3)."""
+    s, v, cols = data
+    rows, total = s.shape
+    d = v.shape[1]
+    state = osm.init_state((rows,), d)
+    for i in range(total // cols):
+        state = osm.update(state, jnp.asarray(s[:, i * cols:(i + 1) * cols]),
+                           jnp.asarray(v[i * cols:(i + 1) * cols]))
+    o, lse = osm.finalize(state)
+    o_ref = _softmax_weighted(s, v)
+    np.testing.assert_allclose(np.asarray(o), o_ref, atol=1e-4, rtol=1e-4)
+    # lse is the true log-sum-exp
+    lse_ref = np.log(np.exp(s - s.max(-1, keepdims=True)).sum(-1)) + s.max(-1)
+    np.testing.assert_allclose(np.asarray(lse), lse_ref, atol=1e-4, rtol=1e-4)
+
+
+@given(score_blocks())
+def test_merge_is_order_invariant(data):
+    """State merge is commutative+associative → kv blocks can be processed in
+    any order (this is what licenses the distributed flash-decode merge)."""
+    s, v, cols = data
+    rows, total = s.shape
+    d = v.shape[1]
+    n = total // cols
+    states = []
+    for i in range(n):
+        st_i = osm.init_state((rows,), d)
+        st_i = osm.update(st_i, jnp.asarray(s[:, i * cols:(i + 1) * cols]),
+                          jnp.asarray(v[i * cols:(i + 1) * cols]))
+        states.append(st_i)
+    fwd = states[0]
+    for st_i in states[1:]:
+        fwd = osm.merge(fwd, st_i)
+    rev = states[-1]
+    for st_i in reversed(states[:-1]):
+        rev = osm.merge(rev, st_i)
+    o1, l1 = osm.finalize(fwd)
+    o2, l2 = osm.finalize(rev)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-4)
+
+
+@given(st.floats(-50, 50), score_blocks())
+def test_shift_invariance(shift, data):
+    """softmax(s + c) == softmax(s): the max-subtraction must absorb shifts."""
+    s, v, cols = data
+    rows, total = s.shape
+    d = v.shape[1]
+
+    def run(sarr):
+        state = osm.init_state((rows,), d)
+        state = osm.update(state, jnp.asarray(sarr), jnp.asarray(v))
+        return osm.finalize(state)[0]
+
+    o1 = run(s)
+    o2 = run(s + np.float32(shift))
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-4)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(0, 63), st.integers(0, 63),
+       st.floats(0.05, 0.95))
+def test_dropout_rng_statistics(seed, b, h, rate):
+    """Keep-rate ≈ 1-rate; mask depends only on coordinates (replayable)."""
+    qp = jnp.arange(256, dtype=jnp.int32)[:, None]
+    kp = jnp.arange(256, dtype=jnp.int32)[None, :]
+    m1 = rng.dropout_keep_mask(rate, seed, b, h, qp, kp)
+    m2 = rng.dropout_keep_mask(rate, seed, b, h, qp, kp)
+    assert bool(jnp.all(m1 == m2))
+    keep = float(jnp.mean(m1))
+    assert abs(keep - (1.0 - rate)) < 0.02
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_dropout_rng_decorrelated_across_heads(seed):
+    qp = jnp.arange(128, dtype=jnp.int32)[:, None]
+    kp = jnp.arange(128, dtype=jnp.int32)[None, :]
+    m_h0 = rng.dropout_keep_mask(0.5, seed, 0, 0, qp, kp)
+    m_h1 = rng.dropout_keep_mask(0.5, seed, 0, 1, qp, kp)
+    agree = float(jnp.mean(m_h0 == m_h1))
+    assert 0.4 < agree < 0.6  # independent masks agree ~half the time

@@ -1,0 +1,106 @@
+"""Sharding-rule engine: divisibility fallback, axis uniqueness, profiles.
+
+Pure-host logic tests (build a Mesh over 1 CPU device via AbstractMesh-style
+shape reasoning is not needed — Mesh construction only needs device objects).
+"""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.distributed.sharding import default_rules, _fsdp_rules
+
+
+def fake_mesh(shape, axes):
+    # sharding specs only consult mesh.shape — build a host-only mesh by
+    # tiling the single CPU device (never used for execution).
+    devs = np.tile(np.array(jax.devices()[:1]), int(np.prod(shape)))
+    return jax.sharding.Mesh(devs.reshape(shape), axes)
+
+
+MESH = fake_mesh((16, 16), ("data", "model"))
+MESH3 = fake_mesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_divisible_dims_shard():
+    cfg = configs.get_config("granite_3_2b")
+    rules = default_rules(MESH, cfg)
+    # d_ff 8192 % 16 == 0 → mlp shards on model
+    assert rules.spec_for(("embed", "mlp"), (2048, 8192)) == P(None, "model")
+    # batch over data
+    assert rules.spec_for(("batch", None), (256, 4096)) == P("data", None)
+
+
+def test_non_divisible_falls_back_to_replication():
+    import dataclasses
+    cfg = dataclasses.replace(configs.get_config("recurrentgemma_2b"),
+                              ctx_parallel_attn=False)  # 10 heads, no CP
+    rules = default_rules(MESH, cfg)
+    spec = rules.spec_for(("batch", "heads", "seq_full", "head_dim"),
+                          (256, 10, 4096, 256))
+    assert spec == P("data", None, None, None)
+    assert rules.rules["heads"] is None  # head rule disabled at build time
+
+
+def test_non_divisible_heads_with_ctx_parallel_shard_seq():
+    # the promoted production config: attention q-rows shard over model
+    cfg = configs.get_config("recurrentgemma_2b")  # ctx_parallel_attn=True
+    rules = default_rules(MESH, cfg)
+    spec = rules.spec_for(("batch", "heads", "seq_full", "head_dim"),
+                          (256, 10, 4096, 256))
+    assert spec == P("data", None, "model", None)
+
+
+def test_axis_used_at_most_once():
+    cfg = configs.get_config("deepseek_moe_16b")   # kv_heads=16 divisible
+    rules = default_rules(MESH, cfg)
+    spec = rules.spec_for(("batch", "kv_heads", "kv_cache_seq", "head_dim"),
+                          (128, 16, 32768, 128))
+    # kv_heads takes 'model'; cache seq must NOT reuse it
+    assert spec == P("data", "model", None, None)
+
+    cfg2 = configs.get_config("granite_3_2b")      # kv_heads=8 not divisible
+    rules2 = default_rules(MESH, cfg2)
+    spec2 = rules2.spec_for(("batch", "kv_heads", "kv_cache_seq", "head_dim"),
+                            (128, 8, 32768, 64))
+    # kv_heads fell back → cache seq picks up 'model' (distributed decode)
+    assert spec2 == P("data", None, "model", None)
+
+
+def test_multipod_batch_spans_pod_and_data():
+    cfg = configs.get_config("granite_3_2b")
+    rules = default_rules(MESH3, cfg)
+    assert rules.spec_for(("batch", None), (256, 4096)) == \
+        P(("pod", "data"), None)
+
+
+def test_fsdp_profile_shards_params_over_both_axes():
+    import dataclasses
+    cfg = dataclasses.replace(configs.get_config("deepseek_67b"),
+                              sharding_profile="fsdp")
+    rules = default_rules(MESH, cfg)
+    # params: embed dim over (data, model) = 256-way ZeRO-3
+    assert rules.spec_for(("embed", "mlp"), (8192, 22016)) == \
+        P(("data", "model"), None)
+    # batch over the same 256-way product
+    assert rules.spec_for(("batch", None), (256, 4096)) == \
+        P(("data", "model"), None)
+    # no TP anywhere
+    assert rules.rules["heads"] is None and rules.rules["mlp"] is None
+
+
+def test_vocab_padding_divisibility():
+    cfg = configs.get_config("granite_3_2b")  # vocab 49155 (odd)
+    rules = default_rules(MESH, cfg)
+    assert rules.spec_for(("vocab", "embed"), (49155, 2048)) == P(None, None)
+    assert rules.spec_for(("vocab", "embed"), (49168, 2048)) == P("model", None)
+
+
+def test_all_archs_build_rules_on_both_meshes():
+    for name in configs.ARCHS:
+        cfg = configs.get_config(name)
+        for mesh in (MESH, MESH3):
+            rules = default_rules(mesh, cfg)
+            assert "batch" in rules.rules
