@@ -1,0 +1,114 @@
+"""Segment-packed (varlen) fused attention vs. padded-naive baseline.
+
+Production traffic is ragged: many short documents per batch. The two ways to
+feed them to attention are
+
+* **padded-naive**: one row per document, each padded to the longest document,
+  unfused attention (the paper's baseline) — HBM traffic includes the S/P
+  round-trips AND every padded token.
+* **packed-fused**: all documents concatenated into a few long rows with
+  ``segment_ids``; the fused kernel masks cross-segment pairs and skips blocks
+  whose segment ranges cannot intersect — 3-reads + 1-write I/O on only the
+  *real* tokens.
+
+The container is CPU-only, so wall-clock numbers time the *algorithms* (XLA
+impls; pass --impl pallas_interpret to run the actual kernels, slower). The HBM
+byte model is the paper's I/O accounting from benchmarks/common.py.
+
+    PYTHONPATH=src python benchmarks/mha_varlen.py [--impl xla] [--docs 16]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from common import mha_hbm_bytes, row, time_fn
+from repro.core.attention import spark_attention
+
+
+def make_docs(rs, n_docs, min_len, max_len):
+    return [int(x) for x in rs.randint(min_len, max_len + 1, size=n_docs)]
+
+
+def pack_rows(lengths, row_len):
+    """First-fit packing of doc lengths into rows of row_len. Returns
+    (segment_ids [n_rows, row_len] int32, padding fraction)."""
+    assert max(lengths) <= row_len, (
+        f"doc of {max(lengths)} tokens cannot pack into rows of {row_len} "
+        f"(raise --row-len or lower --max-len)")
+    rows_ = [[]]
+    for L in sorted(lengths, reverse=True):
+        for r in rows_:
+            if sum(r) + L <= row_len:
+                r.append(L)
+                break
+        else:
+            rows_.append([L])
+    seg = np.full((len(rows_), row_len), -1, np.int32)
+    sid = 0
+    for i, r in enumerate(rows_):
+        t = 0
+        for L in r:
+            seg[i, t:t + L] = sid
+            sid += 1
+            t += L
+    pad_frac = float((seg < 0).mean())
+    return seg, pad_frac
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--impl", default="xla",
+                    choices=["xla", "naive", "pallas_interpret"])
+    ap.add_argument("--docs", type=int, default=16)
+    ap.add_argument("--min-len", type=int, default=32)
+    ap.add_argument("--max-len", type=int, default=448)
+    ap.add_argument("--row-len", type=int, default=512)
+    ap.add_argument("--heads", type=int, default=8)
+    ap.add_argument("--head-dim", type=int, default=64)
+    args = ap.parse_args()
+
+    rs = np.random.RandomState(0)
+    lengths = make_docs(rs, args.docs, args.min_len, args.max_len)
+    h, d = args.heads, args.head_dim
+    total = sum(lengths)
+    max_len = max(lengths)
+
+    # ---- padded-naive: one row per doc, padded to the longest doc ----
+    bp = len(lengths)
+    qp = jnp.asarray(rs.randn(bp, h, max_len, d), jnp.float32)
+    pad_naive = jax.jit(lambda q, k, v: spark_attention(
+        q, k, v, impl="naive", causal=True))
+    us_padded = time_fn(pad_naive, qp, qp, qp)
+    bytes_padded = mha_hbm_bytes(bp, h, h, max_len, max_len, d,
+                                 fused=False, dtype_bytes=4)
+
+    # ---- packed-fused: segment-packed rows + segment-masked fused attention
+    seg, pad_frac = pack_rows(lengths, args.row_len)
+    bq = seg.shape[0]
+    qk = jnp.asarray(rs.randn(bq, h, args.row_len, d), jnp.float32)
+    segj = jnp.asarray(seg)
+    packed = jax.jit(lambda q, k, v: spark_attention(
+        q, k, v, impl=args.impl, causal=True, segment_ids=segj,
+        xla_chunk=128, block_q=128, block_kv=128))
+    us_packed = time_fn(packed, qk, qk, qk)
+    bytes_packed = mha_hbm_bytes(bq, h, h, args.row_len, args.row_len, d,
+                                 fused=True, dtype_bytes=4)
+
+    print(f"# {args.docs} docs of {args.min_len}..{args.max_len} tokens "
+          f"(total {total}); padded batch [{bp}, {max_len}] vs "
+          f"packed [{bq}, {args.row_len}] ({pad_frac:.1%} pad), impl={args.impl}")
+    row("mha_varlen/padded_naive", us_padded, f"hbm_bytes={bytes_padded}")
+    row("mha_varlen/packed_fused", us_packed, f"hbm_bytes={bytes_packed}")
+    row("mha_varlen/hbm_ratio", 0.0,
+        f"padded/packed={bytes_padded / bytes_packed:.2f}x")
+    row("mha_varlen/step_ratio", 0.0,
+        f"padded/packed={us_padded / us_packed:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

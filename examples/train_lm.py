@@ -25,6 +25,12 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--pack", action="store_true",
+                    help="train on segment-packed (varlen) batches: each row "
+                         "packs several short documents, attention and the LM "
+                         "loss stay within document boundaries")
+    ap.add_argument("--min-seg-len", type=int, default=16)
+    ap.add_argument("--max-seg-len", type=int, default=96)
     args = ap.parse_args()
     if not args.resume:
         shutil.rmtree(args.ckpt_dir, ignore_errors=True)
@@ -41,7 +47,12 @@ def main():
                            impl="xla", total_steps=args.steps,
                            warmup_steps=30, xla_chunk=128)
     data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=256,
-                          global_batch=4)
+                          global_batch=4, pack=args.pack,
+                          min_seg_len=args.min_seg_len,
+                          max_seg_len=args.max_seg_len)
+    if args.pack:
+        print(f"packing: segments of {args.min_seg_len}..{args.max_seg_len} "
+              f"tokens per 256-token row (segment-masked attention + loss)")
     trainer = Trainer(arts=arts, data_cfg=data_cfg,
                       tcfg=TrainerConfig(ckpt_dir=args.ckpt_dir,
                                          ckpt_every=100, log_every=10))

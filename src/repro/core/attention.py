@@ -30,10 +30,17 @@ IMPLS = ("pallas", "pallas_interpret", "xla", "naive")
 def spark_attention(q, k, v, *, impl: str = "xla", seed=0,
                     causal: bool = False, window: Optional[int] = None,
                     scale: Optional[float] = None, dropout_rate: float = 0.0,
+                    segment_ids=None,
                     acc_dtype=jnp.float32, bwd_acc_dtype=jnp.float32,
                     block_q: int = 128, block_kv: int = 128,
                     xla_chunk: int = 1024, xla_unroll: bool = False):
-    """Fused MHA. q [B,Hq,Sq,D], k/v [B,Hkv,Skv,D] → [B,Hq,Sq,D]."""
+    """Fused MHA. q [B,Hq,Sq,D], k/v [B,Hkv,Skv,D] → [B,Hq,Sq,D].
+
+    segment_ids: optional [B, Skv] int32 per-token segment ids for packed
+    (variable-length) batches — attention never crosses a segment boundary,
+    negative ids mark padding tokens that attend to nothing. Supported by all
+    four impls with identical semantics (tests assert interchangeability).
+    """
     if impl not in IMPLS:
         raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
     cfg = AttnConfig(causal=causal, window=window, scale=scale,
@@ -41,11 +48,12 @@ def spark_attention(q, k, v, *, impl: str = "xla", seed=0,
                      bwd_acc_dtype=bwd_acc_dtype, block_q=block_q,
                      block_kv=block_kv, interpret=(impl == "pallas_interpret"))
     if impl in ("pallas", "pallas_interpret"):
-        return ops.mha(q, k, v, seed=seed, config=cfg)
+        return ops.mha(q, k, v, seed=seed, segment_ids=segment_ids, config=cfg)
     if impl == "xla":
-        return ops.mha_xla(q, k, v, seed=seed, config=cfg, chunk=xla_chunk,
-                           unroll=xla_unroll)
-    return ops.mha_reference(q, k, v, seed=seed, config=cfg)
+        return ops.mha_xla(q, k, v, seed=seed, segment_ids=segment_ids,
+                           config=cfg, chunk=xla_chunk, unroll=xla_unroll)
+    return ops.mha_reference(q, k, v, seed=seed, segment_ids=segment_ids,
+                             config=cfg)
 
 
 def spark_decode(q, k, v, *, impl: str = "xla", kv_len=None,

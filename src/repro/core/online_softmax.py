@@ -50,7 +50,11 @@ def update(state: SoftmaxState, s: jnp.ndarray, v: jnp.ndarray) -> SoftmaxState:
     m_blk = jnp.max(s, axis=-1)
     m_new = jnp.maximum(state.m, m_blk)
     alpha = jnp.exp(state.m - m_new)                       # rescale of old state
-    p = jnp.exp(s - m_new[..., None])                      # unnormalised probs
+    # rows whose scores are all masked keep m == NEG_INF; exp(s - m) would be
+    # exp(0) = 1 there. Shift by 0 instead so p == 0, l stays 0, and finalize's
+    # l == 0 guard emits zeros (fully-masked rows, e.g. packed-batch padding).
+    m_safe = jnp.where(m_new == NEG_INF, 0.0, m_new)
+    p = jnp.exp(s - m_safe[..., None])                     # unnormalised probs
     l_new = state.l * alpha + jnp.sum(p, axis=-1)
     acc_new = state.acc * alpha[..., None] + p @ v.astype(p.dtype)
     return SoftmaxState(m_new, l_new, acc_new)

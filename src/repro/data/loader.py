@@ -4,6 +4,10 @@ Places each host batch directly into its device-sharded layout (no full-batch
 replication through host memory on any single device) and prefetches the next
 batch on a background thread while the current step runs — compute/IO overlap,
 the data-pipeline half of the paper's "keep the TCUs busy" argument.
+
+Batches are plain dicts; packed (varlen) batches simply carry two extra keys
+('segment_ids', 'positions') that flow through placement untouched — missing
+sharding entries fall back to default device placement.
 """
 
 from __future__ import annotations

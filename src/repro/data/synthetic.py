@@ -26,6 +26,12 @@ class DataConfig:
     seed: int = 0
     frontend: Optional[str] = None   # None → token LM; vision/audio → embeds
     frontend_dim: int = 1024
+    # sequence packing (varlen training): each row packs several short
+    # documents back-to-back; batches gain 'segment_ids' (per-token document
+    # id, non-decreasing along the row) and 'positions' (restarting per doc).
+    pack: bool = False
+    min_seg_len: int = 16
+    max_seg_len: int = 64
 
 
 def _zipf_tokens(rs: np.random.RandomState, shape, vocab):
@@ -39,13 +45,42 @@ def _zipf_tokens(rs: np.random.RandomState, shape, vocab):
     return toks.astype(np.int32)
 
 
+def _pack_layout(rs: np.random.RandomState, batch: int, seq_len: int,
+                 min_len: int, max_len: int):
+    """Deterministic per-row packing: segment ids (0,1,2,… non-decreasing) and
+    per-segment positions. Rows are filled exactly (final doc truncated), so
+    there is no padding; downstream padding uses negative segment ids."""
+    assert 1 <= min_len <= max_len, (
+        f"packing needs 1 <= min_seg_len <= max_seg_len, "
+        f"got {min_len}..{max_len}")
+    seg_ids = np.zeros((batch, seq_len), np.int32)
+    positions = np.zeros((batch, seq_len), np.int32)
+    for i in range(batch):
+        t, sid = 0, 0
+        while t < seq_len:
+            n = min(int(rs.randint(min_len, max_len + 1)), seq_len - t)
+            seg_ids[i, t:t + n] = sid
+            positions[i, t:t + n] = np.arange(n)
+            t += n
+            sid += 1
+    return seg_ids, positions
+
+
 def make_batch(cfg: DataConfig, step: int):
     """Pure function of (cfg.seed, step) → host numpy batch."""
     rs = np.random.RandomState((cfg.seed * 1_000_003 + step) % (2**31 - 1))
     shape = (cfg.global_batch, cfg.seq_len)
     labels = _zipf_tokens(rs, shape, cfg.vocab_size)
     if cfg.frontend is None:
-        return {"tokens": labels, "labels": labels}
+        batch = {"tokens": labels, "labels": labels}
+        if cfg.pack:
+            seg_ids, positions = _pack_layout(
+                rs, cfg.global_batch, cfg.seq_len,
+                cfg.min_seg_len, cfg.max_seg_len)
+            batch["segment_ids"] = seg_ids
+            batch["positions"] = positions
+        return batch
+    assert not cfg.pack, "sequence packing is token-LM only (no frontends)"
     embeds = rs.randn(cfg.global_batch, cfg.seq_len,
                       cfg.frontend_dim).astype(np.float32)
     return {"embeds": embeds, "labels": labels}

@@ -17,6 +17,12 @@ Both passes **recompute the forward** from Q/K (the paper's memory-saving
 choice) using the stored LSE — ``p = exp(s·scale − lse)`` — so S/P never exist
 in HBM.  ``delta = rowsum(dO ∘ O)`` (the paper's *dPsum*) is precomputed once.
 Dropout masks are regenerated from coordinates, bit-identical to the forward.
+
+Segment-packed (varlen) batches mirror flash_fwd.py: per-token ``segment_ids``
+stream in as VMEM blocks, per-block min/max arrive via scalar-prefetch, and the
+``pl.when`` early exits also skip (q-block, kv-block) pairs whose segment
+ranges cannot intersect.  Negative ids mark padding (attends nothing, gets zero
+gradient).
 """
 
 from __future__ import annotations
@@ -31,11 +37,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.online_softmax import NEG_INF
 from repro.kernels import rng
+from repro.kernels.flash_fwd import _pad_segments
 
 
 def _recompute_p(q, k, lse, *, scale, causal, window, q_start, kv_start,
                  block_q, block_kv, skv_real, acc_dtype,
-                 dropout_rate, dropout_seed, b, h):
+                 dropout_rate, dropout_seed, b, h, q_seg=None, kv_seg=None):
     """Recompute probs p [bq, bkv] (f32) + dropout keep mask from stored LSE."""
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=acc_dtype)
@@ -50,19 +57,48 @@ def _recompute_p(q, k, lse, *, scale, causal, window, q_start, kv_start,
         allowed = w_ok if allowed is None else (allowed & w_ok)
     pad_ok = kp < skv_real  # pad mask is cheap; always applied
     allowed = pad_ok if allowed is None else (allowed & pad_ok)
+    if q_seg is not None:
+        seg_ok = (q_seg[:, None] == kv_seg[None, :]) & (q_seg[:, None] >= 0)
+        allowed = allowed & seg_ok
     if allowed is not None:
         s = jnp.where(allowed, s, NEG_INF)
-    p = jnp.exp(s - lse[:, None])          # normalised probs, rows with lse
+    # fully-masked rows store lse == NEG_INF; exp(s - lse) would be exp(0) = 1
+    # there — substitute 0 so the recomputed probs are 0 (zero gradients).
+    lse_safe = jnp.where(lse == NEG_INF, 0.0, lse)
+    p = jnp.exp(s - lse_safe[:, None])     # normalised probs, rows with lse
     keep = None
     if dropout_rate > 0.0:
         keep = rng.dropout_keep_mask(dropout_rate, dropout_seed, b, h, qp, kp)
     return p, keep
 
 
-def _dkv_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
-                dk_ref, dv_ref, dk_acc, dv_acc,
-                *, scale, causal, window, dropout_rate,
-                block_q, block_kv, sq_real, skv_real, acc_dtype):
+def _seg_unpack(refs, segments: bool):
+    """Split the flat Pallas ref list into named groups for both bwd kernels.
+
+    Layout: [seed, (4 seg aggregates)] + [q, k, v, do, lse, delta, (qseg, kseg)]
+    + n outputs + scratch. Returns (seed, aggs, tensors, qseg, kseg, outs+scratch).
+    """
+    if segments:
+        seed_ref, qsmin, qsmax, ksmin, ksmax = refs[:5]
+        q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, qseg_ref, kseg_ref = \
+            refs[5:13]
+        rest = refs[13:]
+        aggs = (qsmin, qsmax, ksmin, ksmax)
+    else:
+        seed_ref = refs[0]
+        q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref = refs[1:7]
+        rest = refs[7:]
+        aggs = qseg_ref = kseg_ref = None
+    return (seed_ref, aggs, (q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref),
+            qseg_ref, kseg_ref, rest)
+
+
+def _dkv_kernel(*refs, scale, causal, window, dropout_rate,
+                block_q, block_kv, sq_real, skv_real, acc_dtype, segments):
+    (seed_ref, aggs, tensors, qseg_ref, kseg_ref, rest) = \
+        _seg_unpack(refs, segments)
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref = tensors
+    dk_ref, dv_ref, dk_acc, dv_acc = rest
     b, h, ik, iq = (pl.program_id(i) for i in range(4))
     nq = pl.num_programs(3)
     q_offset = skv_real - sq_real
@@ -79,6 +115,9 @@ def _dkv_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
         needed &= kv_start <= q_start + block_q - 1
     if window is not None:
         needed &= kv_start + block_kv - 1 > q_start - window
+    if segments:
+        qsmin, qsmax, ksmin, ksmax = aggs
+        needed &= (ksmin[b, ik] <= qsmax[b, iq]) & (ksmax[b, ik] >= qsmin[b, iq])
 
     @pl.when(needed)
     def _compute():
@@ -93,7 +132,9 @@ def _dkv_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
             q, k, lse, scale=scale, causal=causal, window=window,
             q_start=q_start, kv_start=kv_start, block_q=block_q,
             block_kv=block_kv, skv_real=skv_real, acc_dtype=acc_dtype,
-            dropout_rate=dropout_rate, dropout_seed=seed_ref[0], b=b, h=h)
+            dropout_rate=dropout_rate, dropout_seed=seed_ref[0], b=b, h=h,
+            q_seg=None if qseg_ref is None else qseg_ref[0],
+            kv_seg=None if kseg_ref is None else kseg_ref[0])
 
         p_kept = p if keep is None else jnp.where(keep, p / (1.0 - dropout_rate), 0.0)
         # dV += P̃ᵀ · dO
@@ -118,10 +159,12 @@ def _dkv_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
         dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
 
 
-def _dq_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
-               dq_ref, dq_acc,
-               *, scale, causal, window, dropout_rate,
-               block_q, block_kv, sq_real, skv_real, acc_dtype):
+def _dq_kernel(*refs, scale, causal, window, dropout_rate,
+               block_q, block_kv, sq_real, skv_real, acc_dtype, segments):
+    (seed_ref, aggs, tensors, qseg_ref, kseg_ref, rest) = \
+        _seg_unpack(refs, segments)
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref = tensors
+    dq_ref, dq_acc = rest
     b, h, iq, ik = (pl.program_id(i) for i in range(4))
     nk = pl.num_programs(3)
     q_offset = skv_real - sq_real
@@ -137,6 +180,9 @@ def _dq_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
         needed &= kv_start <= q_start + block_q - 1
     if window is not None:
         needed &= kv_start + block_kv - 1 > q_start - window
+    if segments:
+        qsmin, qsmax, ksmin, ksmax = aggs
+        needed &= (ksmin[b, ik] <= qsmax[b, iq]) & (ksmax[b, ik] >= qsmin[b, iq])
 
     @pl.when(needed)
     def _compute():
@@ -151,7 +197,9 @@ def _dq_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
             q, k, lse, scale=scale, causal=causal, window=window,
             q_start=q_start, kv_start=kv_start, block_q=block_q,
             block_kv=block_kv, skv_real=skv_real, acc_dtype=acc_dtype,
-            dropout_rate=dropout_rate, dropout_seed=seed_ref[0], b=b, h=h)
+            dropout_rate=dropout_rate, dropout_seed=seed_ref[0], b=b, h=h,
+            q_seg=None if qseg_ref is None else qseg_ref[0],
+            kv_seg=None if kseg_ref is None else kseg_ref[0])
 
         dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                                  preferred_element_type=acc_dtype).astype(jnp.float32)
@@ -171,7 +219,8 @@ def _dq_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
 def flash_bwd(q, k, v, o, lse, do, *, causal: bool = False,
               window: Optional[int] = None, scale: Optional[float] = None,
               dropout_rate: float = 0.0, dropout_seed: int = 0,
-              acc_dtype=jnp.float32, block_q: int = 128, block_kv: int = 128,
+              segment_ids=None, acc_dtype=jnp.float32,
+              block_q: int = 128, block_kv: int = 128,
               interpret: bool = False):
     """Returns (dq, dk, dv) with the shapes/dtypes of q, k, v."""
     b, hq, sq_real, d = q.shape
@@ -200,15 +249,17 @@ def flash_bwd(q, k, v, o, lse, do, *, causal: bool = False,
         v = jnp.pad(v, pad_kv)
 
     nq, nk = sq // block_q, skv // block_kv
+    segments = segment_ids is not None
     common = dict(scale=scale, causal=causal, window=window,
                   dropout_rate=dropout_rate,
                   block_q=block_q, block_kv=block_kv,
-                  sq_real=sq_real, skv_real=skv_real, acc_dtype=acc_dtype)
+                  sq_real=sq_real, skv_real=skv_real, acc_dtype=acc_dtype,
+                  segments=segments)
 
-    q_spec = pl.BlockSpec((1, 1, block_q, d), lambda b_, h, i, j, _: (b_, h, j, 0))
+    q_spec = pl.BlockSpec((1, 1, block_q, d), lambda b_, h, i, j, *_: (b_, h, j, 0))
     kv_spec = pl.BlockSpec((1, 1, block_kv, d),
-                           lambda b_, h, i, j, _: (b_, h // group, i, 0))
-    row_spec = pl.BlockSpec((1, 1, block_q), lambda b_, h, i, j, _: (b_, h, j))
+                           lambda b_, h, i, j, *_: (b_, h // group, i, 0))
+    row_spec = pl.BlockSpec((1, 1, block_q), lambda b_, h, i, j, *_: (b_, h, j))
 
     kwargs = {}
     if not interpret:
@@ -216,19 +267,33 @@ def flash_bwd(q, k, v, o, lse, do, *, causal: bool = False,
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"))
 
     seed = jnp.atleast_1d(jnp.asarray(dropout_seed, jnp.int32))
+    prefetch = (seed,)
+    seg_inputs = ()
+    if segments:
+        q_seg, kv_seg, aggs = _pad_segments(
+            segment_ids, b, sq_real, skv_real, sq, skv, nq, nk,
+            block_q, block_kv)
+        prefetch = prefetch + aggs
+        seg_inputs = (q_seg, kv_seg)
 
     # ---- pass 1: dK, dV (per q-head; GQA groups reduced below) ----
+    in_specs1 = [q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec]
+    if segments:
+        in_specs1 += [
+            pl.BlockSpec((1, block_q), lambda b_, h, i, j, *_: (b_, j)),
+            pl.BlockSpec((1, block_kv), lambda b_, h, i, j, *_: (b_, i)),
+        ]
     dk, dv = pl.pallas_call(
         functools.partial(_dkv_kernel, **common),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=len(prefetch),
             grid=(b, hq, nk, nq),
-            in_specs=[q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec],
+            in_specs=in_specs1,
             out_specs=[
                 pl.BlockSpec((1, 1, block_kv, d),
-                             lambda b_, h, i, j, _: (b_, h, i, 0)),
+                             lambda b_, h, i, j, *_: (b_, h, i, 0)),
                 pl.BlockSpec((1, 1, block_kv, d),
-                             lambda b_, h, i, j, _: (b_, h, i, 0)),
+                             lambda b_, h, i, j, *_: (b_, h, i, 0)),
             ],
             scratch_shapes=[pltpu.VMEM((block_kv, d), jnp.float32),
                             pltpu.VMEM((block_kv, d), jnp.float32)],
@@ -239,27 +304,33 @@ def flash_bwd(q, k, v, o, lse, do, *, causal: bool = False,
         ],
         interpret=interpret,
         **kwargs,
-    )(seed, q, k, v, do, lse, delta)
+    )(*prefetch, q, k, v, do, lse, delta, *seg_inputs)
 
     # ---- pass 2: dQ ----
-    q_spec2 = pl.BlockSpec((1, 1, block_q, d), lambda b_, h, i, j, _: (b_, h, i, 0))
+    q_spec2 = pl.BlockSpec((1, 1, block_q, d), lambda b_, h, i, j, *_: (b_, h, i, 0))
     kv_spec2 = pl.BlockSpec((1, 1, block_kv, d),
-                            lambda b_, h, i, j, _: (b_, h // group, j, 0))
-    row_spec2 = pl.BlockSpec((1, 1, block_q), lambda b_, h, i, j, _: (b_, h, i))
+                            lambda b_, h, i, j, *_: (b_, h // group, j, 0))
+    row_spec2 = pl.BlockSpec((1, 1, block_q), lambda b_, h, i, j, *_: (b_, h, i))
+    in_specs2 = [q_spec2, kv_spec2, kv_spec2, q_spec2, row_spec2, row_spec2]
+    if segments:
+        in_specs2 += [
+            pl.BlockSpec((1, block_q), lambda b_, h, i, j, *_: (b_, i)),
+            pl.BlockSpec((1, block_kv), lambda b_, h, i, j, *_: (b_, j)),
+        ]
     dq = pl.pallas_call(
         functools.partial(_dq_kernel, **common),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=len(prefetch),
             grid=(b, hq, nq, nk),
-            in_specs=[q_spec2, kv_spec2, kv_spec2, q_spec2, row_spec2, row_spec2],
+            in_specs=in_specs2,
             out_specs=pl.BlockSpec((1, 1, block_q, d),
-                                   lambda b_, h, i, j, _: (b_, h, i, 0)),
+                                   lambda b_, h, i, j, *_: (b_, h, i, 0)),
             scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
         interpret=interpret,
         **kwargs,
-    )(seed, q, k, v, do, lse, delta)
+    )(*prefetch, q, k, v, do, lse, delta, *seg_inputs)
 
     if sq != sq_real:
         dq = dq[:, :, :sq_real]

@@ -16,6 +16,16 @@ are replaced by their TPU-native equivalents:
   `pl.when` (the paper's thread-block early exit).
 * dropout masks are regenerated from element coordinates (kernels/rng.py), so
   the backward recompute sees identical masks with zero HBM mask traffic.
+
+Segment-packed (varlen) batches: ``segment_ids [B, Skv]`` gives each kv token a
+segment id; a token attends only within its own segment (negative ids mark
+padding that attends to nothing and is attended by nothing).  The per-token ids
+stream in as VMEM blocks aligned with the q/kv tiles, while per-block segment
+min/max arrive via scalar-prefetch so the ``pl.when`` early exit also skips
+blocks whose segment ranges cannot intersect — the same ragged-skip pattern as
+``kv_len`` in kernels/decode.py.  The min/max interval test is exact-safe for
+arbitrary ids (equal ids imply overlapping ranges) and tight for the packed
+layout where ids are non-decreasing along the sequence.
 """
 
 from __future__ import annotations
@@ -34,14 +44,18 @@ from repro.kernels import rng
 LANES = 128  # TPU vector lane width; (rows, LANES) f32 scratch for m/l state
 
 
-def _fwd_kernel(seed_ref,                       # scalar prefetch [1] (dropout seed)
-                q_ref, k_ref, v_ref,            # inputs
-                o_ref, lse_ref,                 # outputs
-                acc_ref, m_ref, l_ref,          # VMEM scratch
-                *, scale: float, causal: bool, window: Optional[int],
+def _fwd_kernel(*refs, scale: float, causal: bool, window: Optional[int],
                 dropout_rate: float,
                 block_q: int, block_kv: int, sq: int, skv: int,
-                sq_real: int, skv_real: int, acc_dtype):
+                sq_real: int, skv_real: int, acc_dtype, segments: bool):
+    if segments:
+        (seed_ref, qsmin_ref, qsmax_ref, ksmin_ref, ksmax_ref,  # scalar prefetch
+         q_ref, k_ref, v_ref, qseg_ref, kseg_ref,               # inputs
+         o_ref, lse_ref,                                        # outputs
+         acc_ref, m_ref, l_ref) = refs                          # VMEM scratch
+    else:
+        (seed_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
+         acc_ref, m_ref, l_ref) = refs
     b, h, iq, ik = (pl.program_id(i) for i in range(4))
     nk = pl.num_programs(3)
     q_offset = skv_real - sq_real          # q tokens are the suffix of kv
@@ -62,6 +76,9 @@ def _fwd_kernel(seed_ref,                       # scalar prefetch [1] (dropout s
         needed &= kv_start + block_kv - 1 > q_start - window
     if skv != skv_real:  # padded kv tail block may be entirely out of range
         needed &= kv_start < skv_real
+    if segments:  # kv block's segment range must intersect the q block's
+        needed &= (ksmin_ref[b, ik] <= qsmax_ref[b, iq]) & \
+                  (ksmax_ref[b, ik] >= qsmin_ref[b, iq])
 
     @pl.when(needed)
     def _compute():
@@ -84,6 +101,11 @@ def _fwd_kernel(seed_ref,                       # scalar prefetch [1] (dropout s
         if skv != skv_real:
             pad_ok = kp < skv_real
             allowed = pad_ok if allowed is None else (allowed & pad_ok)
+        if segments:
+            q_seg = qseg_ref[0]                             # [bq]
+            kv_seg = kseg_ref[0]                            # [bkv]
+            seg_ok = (q_seg[:, None] == kv_seg[None, :]) & (q_seg[:, None] >= 0)
+            allowed = seg_ok if allowed is None else (allowed & seg_ok)
         if allowed is not None:
             s = jnp.where(allowed, s, NEG_INF)
 
@@ -92,7 +114,11 @@ def _fwd_kernel(seed_ref,                       # scalar prefetch [1] (dropout s
         l_prev = l_ref[:, 0]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
         alpha = jnp.exp(m_prev - m_new)                     # rescale factor
-        p = jnp.exp(s - m_new[:, None])                     # [bq, bkv] f32
+        # rows that have only ever seen masked scores keep m == NEG_INF; there
+        # exp(s - m) would be exp(0) = 1 — substitute 0 so l stays 0 and the
+        # finalize l==0 path emits zeros (fully-masked rows, e.g. packed pad).
+        m_safe = jnp.where(m_new == NEG_INF, 0.0, m_new)
+        p = jnp.exp(s - m_safe[:, None])                    # [bq, bkv] f32
         l_new = l_prev * alpha + jnp.sum(p, axis=1)
         m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
         l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
@@ -115,12 +141,41 @@ def _fwd_kernel(seed_ref,                       # scalar prefetch [1] (dropout s
         lse_ref[0, 0] = m_ref[:, 0] + jnp.log(l_safe)
 
 
+def _pad_segments(segment_ids, b, sq_real, skv_real, sq, skv, nq, nk,
+                  block_q, block_kv):
+    """Pad per-token ids to block multiples and build per-block min/max.
+
+    Returns (q_seg [B, sq], kv_seg [B, skv], prefetch aggregates
+    (qs_min, qs_max, ks_min, ks_max) each [B, n_blocks] int32).  Padding uses
+    -1: negative ids never match (`seg >= 0` in the kernels), and the min/max
+    interval-overlap skip stays conservative-correct with them present.
+    """
+    kv_seg = jnp.asarray(segment_ids, jnp.int32)
+    assert kv_seg.shape == (b, skv_real), (
+        f"segment_ids must be [B, Skv] = {(b, skv_real)}, got {kv_seg.shape}")
+    q_seg = kv_seg[:, skv_real - sq_real:]
+    if skv != skv_real:
+        kv_seg = jnp.pad(kv_seg, ((0, 0), (0, skv - skv_real)),
+                         constant_values=-1)
+    if sq != sq_real:
+        q_seg = jnp.pad(q_seg, ((0, 0), (0, sq - sq_real)), constant_values=-1)
+    qs = q_seg.reshape(b, nq, block_q)
+    ks = kv_seg.reshape(b, nk, block_kv)
+    aggs = (qs.min(-1), qs.max(-1), ks.min(-1), ks.max(-1))
+    return q_seg, kv_seg, aggs
+
+
 def flash_fwd(q, k, v, *, causal: bool = False, window: Optional[int] = None,
               scale: Optional[float] = None, dropout_rate: float = 0.0,
-              dropout_seed: int = 0, acc_dtype=jnp.float32,
+              dropout_seed: int = 0, segment_ids=None, acc_dtype=jnp.float32,
               block_q: int = 128, block_kv: int = 128,
               interpret: bool = False):
-    """Returns (o [B,Hq,Sq,D], lse [B,Hq,Sq] f32). Pads seq dims to block multiples."""
+    """Returns (o [B,Hq,Sq,D], lse [B,Hq,Sq] f32). Pads seq dims to block multiples.
+
+    segment_ids: optional [B, Skv] int32 — per-token segment ids over the kv
+    sequence (q tokens are its suffix). Attention is masked across segments;
+    negative ids mark padding rows/keys that attend to nothing.
+    """
     b, hq, sq_real, d = q.shape
     _, hkv, skv_real, _ = k.shape
     assert hq % hkv == 0
@@ -138,12 +193,14 @@ def flash_fwd(q, k, v, *, causal: bool = False, window: Optional[int] = None,
         v = jnp.pad(v, ((0, 0), (0, 0), (0, skv - skv_real), (0, 0)))
 
     nq, nk = sq // block_q, skv // block_kv
+    segments = segment_ids is not None
 
     kernel = functools.partial(
         _fwd_kernel, scale=scale, causal=causal, window=window,
         dropout_rate=dropout_rate,
         block_q=block_q, block_kv=block_kv, sq=sq, skv=skv,
-        sq_real=sq_real, skv_real=skv_real, acc_dtype=acc_dtype)
+        sq_real=sq_real, skv_real=skv_real, acc_dtype=acc_dtype,
+        segments=segments)
 
     kwargs = {}
     if not interpret:
@@ -151,21 +208,35 @@ def flash_fwd(q, k, v, *, causal: bool = False, window: Optional[int] = None,
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"))
 
     seed = jnp.atleast_1d(jnp.asarray(dropout_seed, jnp.int32))
+    in_specs = [
+        pl.BlockSpec((1, 1, block_q, d),
+                     lambda b_, h, iq, ik, *_: (b_, h, iq, 0)),
+        pl.BlockSpec((1, 1, block_kv, d),
+                     lambda b_, h, iq, ik, *_: (b_, h // group, ik, 0)),
+        pl.BlockSpec((1, 1, block_kv, d),
+                     lambda b_, h, iq, ik, *_: (b_, h // group, ik, 0)),
+    ]
+    prefetch = (seed,)
+    inputs = (q, k, v)
+    if segments:
+        q_seg, kv_seg, aggs = _pad_segments(
+            segment_ids, b, sq_real, skv_real, sq, skv, nq, nk,
+            block_q, block_kv)
+        prefetch = prefetch + aggs
+        inputs = inputs + (q_seg, kv_seg)
+        in_specs += [
+            pl.BlockSpec((1, block_q), lambda b_, h, iq, ik, *_: (b_, iq)),
+            pl.BlockSpec((1, block_kv), lambda b_, h, iq, ik, *_: (b_, ik)),
+        ]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=len(prefetch),
         grid=(b, hq, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, 1, block_q, d),
-                         lambda b_, h, iq, ik, _: (b_, h, iq, 0)),
-            pl.BlockSpec((1, 1, block_kv, d),
-                         lambda b_, h, iq, ik, _: (b_, h // group, ik, 0)),
-            pl.BlockSpec((1, 1, block_kv, d),
-                         lambda b_, h, iq, ik, _: (b_, h // group, ik, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, block_q, d),
-                         lambda b_, h, iq, ik, _: (b_, h, iq, 0)),
-            pl.BlockSpec((1, 1, block_q), lambda b_, h, iq, ik, _: (b_, h, iq)),
+                         lambda b_, h, iq, ik, *_: (b_, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b_, h, iq, ik, *_: (b_, h, iq)),
         ],
         scratch_shapes=[
             pltpu.VMEM((block_q, d), jnp.float32),
@@ -182,7 +253,7 @@ def flash_fwd(q, k, v, *, causal: bool = False, window: Optional[int] = None,
         ],
         interpret=interpret,
         **kwargs,
-    )(seed, q, k, v)
+    )(*prefetch, *inputs)
 
     if sq != sq_real:
         o = o[:, :, :sq_real]

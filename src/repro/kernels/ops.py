@@ -38,63 +38,76 @@ class AttnConfig:
     interpret: bool = False
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
-def _mha(q, k, v, seed, cfg: AttnConfig):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _mha(q, k, v, seed, segment_ids, cfg: AttnConfig):
     o, _ = flash_fwd(q, k, v, causal=cfg.causal, window=cfg.window,
                      scale=cfg.scale, dropout_rate=cfg.dropout_rate,
-                     dropout_seed=seed, acc_dtype=cfg.acc_dtype,
+                     dropout_seed=seed, segment_ids=segment_ids,
+                     acc_dtype=cfg.acc_dtype,
                      block_q=cfg.block_q, block_kv=cfg.block_kv,
                      interpret=cfg.interpret)
     return o
 
 
-def _mha_fwd(q, k, v, seed, cfg: AttnConfig):
+def _mha_fwd(q, k, v, seed, segment_ids, cfg: AttnConfig):
     o, lse = flash_fwd(q, k, v, causal=cfg.causal, window=cfg.window,
                        scale=cfg.scale, dropout_rate=cfg.dropout_rate,
-                       dropout_seed=seed, acc_dtype=cfg.acc_dtype,
+                       dropout_seed=seed, segment_ids=segment_ids,
+                       acc_dtype=cfg.acc_dtype,
                        block_q=cfg.block_q, block_kv=cfg.block_kv,
                        interpret=cfg.interpret)
     # Residuals: q,k,v + (o, lse) — S/P are recomputed in the backward kernels,
     # the paper's memory-saving choice (§3.3).
-    return o, (q, k, v, o, lse, seed)
+    return o, (q, k, v, o, lse, seed, segment_ids)
 
 
 def _mha_bwd(cfg: AttnConfig, res, do):
-    q, k, v, o, lse, seed = res
+    q, k, v, o, lse, seed, segment_ids = res
     dq, dk, dv = flash_bwd(q, k, v, o, lse, do, causal=cfg.causal,
                            window=cfg.window, scale=cfg.scale,
                            dropout_rate=cfg.dropout_rate, dropout_seed=seed,
+                           segment_ids=segment_ids,
                            acc_dtype=cfg.bwd_acc_dtype,
                            block_q=cfg.block_q, block_kv=cfg.block_kv,
                            interpret=cfg.interpret)
-    return dq, dk, dv, None
+    return dq, dk, dv, None, None
 
 
 _mha.defvjp(_mha_fwd, _mha_bwd)
 
 
-def mha(q, k, v, *, seed=0, config: AttnConfig = AttnConfig()):
+def mha(q, k, v, *, seed=0, segment_ids=None,
+        config: AttnConfig = AttnConfig()):
     """Fused multi-head attention, differentiable.
 
     q: [B, Hq, Sq, D], k/v: [B, Hkv, Skv, D] → o: [B, Hq, Sq, D].
+    segment_ids: optional [B, Skv] int32 per-token segment ids (packed/varlen
+    batches); attention never crosses a segment boundary, negative ids mark
+    padding. Carried as a traced residual (not in AttnConfig, which must stay
+    hashable for the nondiff argnum) so a jitted train step can feed a fresh
+    packing layout every step without recompilation.
     """
     seed = jnp.asarray(seed, jnp.int32)
-    return _mha(q, k, v, seed, config)
+    return _mha(q, k, v, seed, segment_ids, config)
 
 
-def mha_reference(q, k, v, *, seed=0, config: AttnConfig = AttnConfig()):
+def mha_reference(q, k, v, *, seed=0, segment_ids=None,
+                  config: AttnConfig = AttnConfig()):
     """The unfused oracle with identical semantics (paper's PyTorch baseline)."""
     return ref.naive_mha(q, k, v, causal=config.causal, window=config.window,
                          scale=config.scale, dropout_rate=config.dropout_rate,
-                         dropout_seed=seed, acc_dtype=jnp.float32)
+                         dropout_seed=seed, segment_ids=segment_ids,
+                         acc_dtype=jnp.float32)
 
 
-def mha_xla(q, k, v, *, seed=0, config: AttnConfig = AttnConfig(),
+def mha_xla(q, k, v, *, seed=0, segment_ids=None,
+            config: AttnConfig = AttnConfig(),
             chunk: int = 1024, unroll: bool = False):
     """The fused algorithm in plain XLA ops (dry-run / CPU-runnable path)."""
     return ref.online_mha(q, k, v, causal=config.causal, window=config.window,
                           scale=config.scale, dropout_rate=config.dropout_rate,
-                          dropout_seed=seed, acc_dtype=jnp.float32, chunk=chunk,
+                          dropout_seed=seed, segment_ids=segment_ids,
+                          acc_dtype=jnp.float32, chunk=chunk,
                           unroll=unroll)
 
 

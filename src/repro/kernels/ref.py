@@ -17,6 +17,8 @@ Conventions (shared by every implementation in this repo):
   q tokens are the *suffix* of the kv sequence: global q position =
   (Skv - Sq) + i. ``causal`` masks kv_pos > q_pos; ``window=w`` additionally
   masks kv_pos <= q_pos - w (sliding-window / local attention).
+  ``segment_ids [B, Skv]`` masks cross-segment pairs (packed/varlen batches);
+  negative ids are padding — those rows emit zeros and lse == NEG_INF.
 Returns (o [B, Hq, Sq, D] in q.dtype, lse [B, Hq, Sq] f32).
 """
 
@@ -69,9 +71,15 @@ def dropout_mask(seed: int, b_idx, h_idx, sq: int, skv: int, rate: float,
                                              "acc_dtype", "return_residuals"))
 def naive_mha(q, k, v, *, causal: bool = False, window: Optional[int] = None,
               scale: Optional[float] = None, dropout_rate: float = 0.0,
-              dropout_seed: int = 0, acc_dtype=jnp.float32,
+              dropout_seed: int = 0, segment_ids=None, acc_dtype=jnp.float32,
               return_residuals: bool = False):
-    """Unfused attention oracle. All softmax math in f32; matmuls in acc_dtype."""
+    """Unfused attention oracle. All softmax math in f32; matmuls in acc_dtype.
+
+    segment_ids: optional [B, Skv] int32 per-token segment ids (q is the kv
+    suffix). Cross-segment scores are masked; negative ids mark padding.
+    Fully-masked rows produce o == 0 and lse == NEG_INF (matching the fused
+    kernels' l == 0 finalize path), never NaN or a uniform average.
+    """
     b, hq, sq, d = q.shape
     scale = (d ** -0.5) if scale is None else scale
     k = _expand_kv(k, hq)
@@ -82,11 +90,21 @@ def naive_mha(q, k, v, *, causal: bool = False, window: Optional[int] = None,
     bias = mask_bias(sq, k.shape[2], causal=causal, window=window)
     if bias is not None:
         s = s + bias
+    if segment_ids is not None:
+        seg = jnp.asarray(segment_ids, jnp.int32)
+        q_seg = seg[:, k.shape[2] - sq:]
+        seg_ok = ((q_seg[:, :, None] == seg[:, None, :]) &
+                  (q_seg[:, :, None] >= 0))[:, None]       # [B, 1, Sq, Skv]
+        s = jnp.where(seg_ok, s, NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
-    p = jnp.exp(s - m)
+    # fully-masked rows: m == NEG_INF ⇒ exp(s - m) would be 1 everywhere; use
+    # a shifted max so p == 0 and the l == 0 guard yields zeros, not averages.
+    m_safe = jnp.where(m == NEG_INF, 0.0, m)
+    p = jnp.exp(s - m_safe)
     l = jnp.sum(p, axis=-1, keepdims=True)
-    lse = (m + jnp.log(l))[..., 0]
-    p = p / l
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    lse = (m + jnp.log(l_safe))[..., 0]
+    p = p / l_safe
     if dropout_rate > 0.0:
         q_offset = k.shape[2] - sq
         bi = jnp.arange(b, dtype=jnp.int32)[:, None, None, None]
@@ -125,9 +143,11 @@ def _unfold_gqa(x, hq, sq):
 
 
 def _block_masks(b, hkv, g, sq, chunk, ci, *, q_offset, causal, window,
-                 dropout_rate, dropout_seed):
+                 dropout_rate, dropout_seed, q_seg_rows=None, seg_blk=None):
     """(additive-mask allowed, dropout keep) for folded-GQA score blocks.
-    Row order is sq-major: qp = row // g, group = row % g."""
+    Row order is sq-major: qp = row // g, group = row % g.
+    q_seg_rows [b, rows] / seg_blk [b, chunk]: per-token segment ids (packed
+    batches); cross-segment and negative-id (padding) pairs are masked."""
     rows = sq * g
     row = jnp.arange(rows, dtype=jnp.int32)
     qp = (row // g + q_offset)[:, None]                  # [rows, 1]
@@ -138,6 +158,10 @@ def _block_masks(b, hkv, g, sq, chunk, ci, *, q_offset, causal, window,
     if window is not None:
         w_ok = kp > qp - window
         allowed = w_ok if allowed is None else (allowed & w_ok)
+    if q_seg_rows is not None:
+        seg_ok = ((q_seg_rows[:, :, None] == seg_blk[:, None, :]) &
+                  (q_seg_rows[:, :, None] >= 0))[:, None]  # [b, 1, rows, chunk]
+        allowed = seg_ok if allowed is None else (allowed & seg_ok)
     keep = None
     if dropout_rate > 0.0:
         bi = jnp.arange(b, dtype=jnp.int32)[:, None, None, None]
@@ -148,7 +172,7 @@ def _block_masks(b, hkv, g, sq, chunk, ci, *, q_offset, causal, window,
     return allowed, keep
 
 
-def _online_fwd(q, k, v, seed, *, causal, window, scale, dropout_rate,
+def _online_fwd(q, k, v, seed, seg, *, causal, window, scale, dropout_rate,
                 acc_dtype, chunk, unroll):
     b, hq, sq, d = q.shape
     hkv, skv = k.shape[1], k.shape[2]
@@ -160,21 +184,35 @@ def _online_fwd(q, k, v, seed, *, causal, window, scale, dropout_rate,
 
     kc = k.reshape(b, hkv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
     vc = v.reshape(b, hkv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    q_seg_rows = segc = None
+    if seg is not None:
+        seg = jnp.asarray(seg, jnp.int32)
+        # [b, sq*g] sq-major rows (matches _fold_gqa ordering)
+        q_seg_rows = jnp.repeat(seg[:, q_offset:], g, axis=1)
+        segc = seg.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
 
     def body(state: SoftmaxState, inputs):
-        ci, k_blk, v_blk = inputs
+        if seg is None:
+            ci, k_blk, v_blk = inputs
+            seg_blk = None
+        else:
+            ci, k_blk, v_blk, seg_blk = inputs
         s = jnp.einsum("bhqd,bhkd->bhqk", qf, k_blk.astype(acc_dtype),
                        preferred_element_type=acc_dtype
                        ).astype(jnp.float32) * scale
         allowed, keep = _block_masks(b, hkv, g, sq, chunk, ci,
                                      q_offset=q_offset, causal=causal,
                                      window=window, dropout_rate=dropout_rate,
-                                     dropout_seed=seed)
+                                     dropout_seed=seed,
+                                     q_seg_rows=q_seg_rows, seg_blk=seg_blk)
         if allowed is not None:
             s = jnp.where(allowed, s, NEG_INF)
         m_new = jnp.maximum(state.m, jnp.max(s, axis=-1))
         alpha = jnp.exp(state.m - m_new)
-        p = jnp.exp(s - m_new[..., None])
+        # fully-masked-so-far rows (m == NEG_INF): exp(s - m) would be 1; shift
+        # so p == 0 and finalize's l == 0 guard yields zeros (see flash_fwd).
+        m_safe = jnp.where(m_new == NEG_INF, 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
         l_new = state.l * alpha + jnp.sum(p, axis=-1)
         p_kept = p if keep is None else \
             jnp.where(keep, p / (1.0 - dropout_rate), 0.0)
@@ -194,17 +232,19 @@ def _online_fwd(q, k, v, seed, *, causal, window, scale, dropout_rate,
     if unroll:  # dry-run cost pass: scan bodies are undercounted by XLA cost
         state = init
         for ci in range(n_chunks):
-            state, _ = body(state, (jnp.int32(ci), kc[ci], vc[ci]))
+            inp = (jnp.int32(ci), kc[ci], vc[ci])
+            state, _ = body(state, inp if seg is None else inp + (segc[ci],))
     else:
+        xs = (jnp.arange(n_chunks), kc, vc)
         state, _ = jax.lax.scan(body, init,
-                                (jnp.arange(n_chunks), kc, vc))
+                                xs if seg is None else xs + (segc,))
     o, lse = finalize(state, out_dtype=q.dtype)
     o = _unfold_gqa(o, hq, sq)
     lse = _unfold_gqa(lse, hq, sq)
     return o, lse
 
 
-def _online_bwd(q, k, v, o, lse, do, seed, *, causal, window, scale,
+def _online_bwd(q, k, v, o, lse, do, seed, seg, *, causal, window, scale,
                 dropout_rate, acc_dtype, chunk, unroll):
     """Chunked recompute backward — the XLA mirror of kernels/flash_bwd.py.
 
@@ -225,19 +265,31 @@ def _online_bwd(q, k, v, o, lse, do, seed, *, causal, window, scale,
 
     kc = k.reshape(b, hkv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
     vc = v.reshape(b, hkv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    q_seg_rows = segc = None
+    if seg is not None:
+        seg = jnp.asarray(seg, jnp.int32)
+        q_seg_rows = jnp.repeat(seg[:, q_offset:], g, axis=1)
+        segc = seg.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+    # fully-masked rows store lse == NEG_INF; shift so recomputed p == 0 there
+    lsef_safe = jnp.where(lsef == NEG_INF, 0.0, lsef)
 
     def body(dq_acc, inputs):
-        ci, k_blk, v_blk = inputs
+        if seg is None:
+            ci, k_blk, v_blk = inputs
+            seg_blk = None
+        else:
+            ci, k_blk, v_blk, seg_blk = inputs
         s = jnp.einsum("bhqd,bhkd->bhqk", qf, k_blk.astype(acc_dtype),
                        preferred_element_type=acc_dtype
                        ).astype(jnp.float32) * scale
         allowed, keep = _block_masks(b, hkv, g, sq, chunk, ci,
                                      q_offset=q_offset, causal=causal,
                                      window=window, dropout_rate=dropout_rate,
-                                     dropout_seed=seed)
+                                     dropout_seed=seed,
+                                     q_seg_rows=q_seg_rows, seg_blk=seg_blk)
         if allowed is not None:
             s = jnp.where(allowed, s, NEG_INF)
-        p = jnp.exp(s - lsef[..., None])                  # recomputed probs
+        p = jnp.exp(s - lsef_safe[..., None])             # recomputed probs
         p_kept = p if keep is None else \
             jnp.where(keep, p / (1.0 - dropout_rate), 0.0)
         dv_blk = jnp.einsum("bhqk,bhqd->bhkd", p_kept.astype(acc_dtype), dof,
@@ -258,35 +310,38 @@ def _online_bwd(q, k, v, o, lse, do, seed, *, causal, window, scale,
     if unroll:
         dq_acc, dks, dvs = dq0, [], []
         for ci in range(n_chunks):
-            dq_acc, (dkb, dvb) = body(dq_acc, (jnp.int32(ci), kc[ci], vc[ci]))
+            inp = (jnp.int32(ci), kc[ci], vc[ci])
+            dq_acc, (dkb, dvb) = body(
+                dq_acc, inp if seg is None else inp + (segc[ci],))
             dks.append(dkb)
             dvs.append(dvb)
         dk_st = jnp.stack(dks)
         dv_st = jnp.stack(dvs)
     else:
+        xs = (jnp.arange(n_chunks), kc, vc)
         dq_acc, (dk_st, dv_st) = jax.lax.scan(
-            body, dq0, (jnp.arange(n_chunks), kc, vc))
+            body, dq0, xs if seg is None else xs + (segc,))
     dq = _unfold_gqa(dq_acc, hq, sq).astype(q.dtype)
     dk = dk_st.transpose(1, 2, 0, 3, 4).reshape(b, hkv, skv, d).astype(k.dtype)
     dv = dv_st.transpose(1, 2, 0, 3, 4).reshape(b, hkv, skv, d).astype(v.dtype)
     return dq, dk, dv
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
-def _online_cv(q, k, v, seed, statics):
-    o, _ = _online_fwd(q, k, v, seed, **dict(statics))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _online_cv(q, k, v, seed, seg, statics):
+    o, _ = _online_fwd(q, k, v, seed, seg, **dict(statics))
     return o
 
 
-def _online_cv_fwd(q, k, v, seed, statics):
-    o, lse = _online_fwd(q, k, v, seed, **dict(statics))
-    return o, (q, k, v, o, lse, seed)
+def _online_cv_fwd(q, k, v, seed, seg, statics):
+    o, lse = _online_fwd(q, k, v, seed, seg, **dict(statics))
+    return o, (q, k, v, o, lse, seed, seg)
 
 
 def _online_cv_bwd(statics, res, do):
-    q, k, v, o, lse, seed = res
-    dq, dk, dv = _online_bwd(q, k, v, o, lse, do, seed, **dict(statics))
-    return dq, dk, dv, None
+    q, k, v, o, lse, seed, seg = res
+    dq, dk, dv = _online_bwd(q, k, v, o, lse, do, seed, seg, **dict(statics))
+    return dq, dk, dv, None, None
 
 
 _online_cv.defvjp(_online_cv_fwd, _online_cv_bwd)
@@ -294,7 +349,7 @@ _online_cv.defvjp(_online_cv_fwd, _online_cv_bwd)
 
 def online_mha(q, k, v, *, causal: bool = False, window: Optional[int] = None,
                scale: Optional[float] = None, dropout_rate: float = 0.0,
-               dropout_seed: int = 0, acc_dtype=jnp.float32,
+               dropout_seed: int = 0, segment_ids=None, acc_dtype=jnp.float32,
                chunk: int = 1024, unroll: bool = False,
                return_residuals: bool = False):
     """Chunked online-softmax attention in plain XLA (the kernel's algorithm).
@@ -305,6 +360,7 @@ def online_mha(q, k, v, *, causal: bool = False, window: Optional[int] = None,
     through the scan would save the full f32 acc carry per chunk (≈5 GB/layer
     at 32k/40-head scales; found via the dry-run memory pass, EXPERIMENTS.md
     §Perf). GQA folds the q-head group into rows instead of expanding K/V.
+    segment_ids [B, Skv] masks cross-segment pairs (packed/varlen batches).
     """
     b, hq, sq, d = q.shape
     scale = (d ** -0.5) if scale is None else scale
@@ -313,7 +369,8 @@ def online_mha(q, k, v, *, causal: bool = False, window: Optional[int] = None,
                          chunk=chunk, unroll=unroll).items())
     seed = jnp.asarray(dropout_seed, jnp.int32)
     if return_residuals:
-        return _online_fwd(q, k, v, seed, causal=causal, window=window,
-                           scale=scale, dropout_rate=dropout_rate,
-                           acc_dtype=acc_dtype, chunk=chunk, unroll=unroll)
-    return _online_cv(q, k, v, seed, statics)
+        return _online_fwd(q, k, v, seed, segment_ids, causal=causal,
+                           window=window, scale=scale,
+                           dropout_rate=dropout_rate, acc_dtype=acc_dtype,
+                           chunk=chunk, unroll=unroll)
+    return _online_cv(q, k, v, seed, segment_ids, statics)

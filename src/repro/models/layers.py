@@ -84,15 +84,22 @@ def rope(x, positions, *, base: float = 10000.0):
     return out.astype(x.dtype)
 
 
-def softmax_cross_entropy(logits, labels, vocab_size: int):
-    """Mean CE over all positions. logits [B,S,V] (V may be padded), labels [B,S]."""
+def softmax_cross_entropy(logits, labels, vocab_size: int, weights=None):
+    """Mean CE over positions. logits [B,S,V] (V may be padded), labels [B,S].
+
+    weights: optional [B,S] per-position mask/weights — weighted mean over
+    positions with weight > 0 (packed batches mask segment boundaries)."""
     logits = logits.astype(jnp.float32)
     if logits.shape[-1] > vocab_size:  # mask vocab padding
         neg = jnp.full((logits.shape[-1] - vocab_size,), -1e30, jnp.float32)
         logits = logits.at[..., vocab_size:].set(neg)
     lse = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
-    return jnp.mean(lse - gold)
+    ce = lse - gold
+    if weights is None:
+        return jnp.mean(ce)
+    w = weights.astype(jnp.float32)
+    return jnp.sum(ce * w) / jnp.maximum(jnp.sum(w), 1.0)
 
 
 # ---------------------------------------------------------------------------
@@ -139,10 +146,13 @@ def init_attention(key, cfg, dtype):
 
 
 def apply_attention(p, x, ctx: Ctx, cfg, *, positions=None, cache=None,
-                    layer_seed=0):
+                    layer_seed=0, segment_ids=None):
     """x: [B, S, d]. Returns (out, new_cache).
 
     cache (decode/prefill): dict with k/v [B, Hkv, S_max, D] and index scalar.
+    segment_ids [B, S]: packed-batch segment ids — attention stays within a
+    segment (training path only; pair with per-segment ``positions`` so RoPE
+    restarts at each packed sequence).
     """
     b, s, d = x.shape
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -170,6 +180,11 @@ def apply_attention(p, x, ctx: Ctx, cfg, *, positions=None, cache=None,
         # invariant over keys, so slot order inside the ring is irrelevant and
         # no window mask is needed (every resident entry is in-window).
         assert s == 1 and cache is not None
+        # same hazard as packed prefill below: the cache carries no segment
+        # structure, so a segment mask cannot be honored here — refuse it
+        assert segment_ids is None, \
+            "segment_ids is training-only: decode reads a cache with no " \
+            "segment structure (packed serving is a ROADMAP item)"
         idx = cache["index"]
         cap = cache["k"].shape[2]
         slot = idx % cap if cfg.attn_window is not None else idx
@@ -196,6 +211,11 @@ def apply_attention(p, x, ctx: Ctx, cfg, *, positions=None, cache=None,
         new_cache = {"k": ck, "v": cv, "index": idx + 1}
     else:
         if cache is not None:  # prefill (from position 0): fill the cache
+            # the cache stores no segment structure, so a packed prefill would
+            # silently decode across document boundaries later — refuse it
+            assert segment_ids is None, \
+                "segment_ids is training-only: prefill/decode caches carry " \
+                "no segment structure (packed serving is a ROADMAP item)"
             cap = cache["k"].shape[2]
             kc = k.astype(cache["k"].dtype)
             vc = v.astype(cache["v"].dtype)
@@ -211,7 +231,8 @@ def apply_attention(p, x, ctx: Ctx, cfg, *, positions=None, cache=None,
         drop = 0.0 if ctx.deterministic else cfg.dropout_rate
         o = spark_attention(q, k, v, impl=ctx.impl, seed=ctx.seed + layer_seed,
                             causal=cfg.causal, window=cfg.attn_window,
-                            dropout_rate=drop, acc_dtype=ctx.acc_dtype,
+                            dropout_rate=drop, segment_ids=segment_ids,
+                            acc_dtype=ctx.acc_dtype,
                             bwd_acc_dtype=ctx.bwd_acc_dtype,
                             block_q=ctx.block_q, block_kv=ctx.block_kv,
                             xla_chunk=ctx.xla_chunk, xla_unroll=ctx.xla_unroll)

@@ -55,13 +55,13 @@ def _init_block(key, cfg, kind: str, dtype):
 
 
 def _apply_block(p, x, ctx: Ctx, cfg, kind: str, *, positions, cache,
-                 layer_seed):
+                 layer_seed, segment_ids=None):
     metrics = {}
     h = layers.rms_norm(x, p["norm1"])
     if kind == "attn":
         mixed, new_cache = layers.apply_attention(
             p["mixer"], h, ctx, cfg, positions=positions, cache=cache,
-            layer_seed=layer_seed)
+            layer_seed=layer_seed, segment_ids=segment_ids)
     elif kind == "rec":
         mixed, new_cache = rglru.apply_rglru(p["mixer"], h, ctx, cfg,
                                              cache=cache)
@@ -159,9 +159,14 @@ def _block_kinds(cfg):
 
 
 def forward(cfg, params, ctx: Ctx, *, tokens=None, embeds=None, caches=None,
-            positions=None):
+            positions=None, segment_ids=None):
     """tokens [B,S] int32 OR embeds [B,S,FRONTEND_DIM]. Returns
-    (logits [B,S,Vpad], new_caches, metrics)."""
+    (logits [B,S,Vpad], new_caches, metrics).
+
+    segment_ids [B,S]: packed-batch segment ids — attention blocks mask
+    cross-segment pairs; pass per-segment ``positions`` alongside so RoPE
+    restarts per packed sequence. Recurrent/SSM blocks carry state across
+    the whole row regardless (packing is an attention-family feature)."""
     period, n_super, rem = _block_kinds(cfg)
     if embeds is not None:
         x = embeds.astype(cfg.dtype) @ params["frontend_proj"]
@@ -184,7 +189,8 @@ def forward(cfg, params, ctx: Ctx, *, tokens=None, embeds=None, caches=None,
             seed_off = super_idx * period + j
             x, nc, m = _apply_block(super_params[f"sub_{j}"], x, ctx, cfg, kind,
                                     positions=positions, cache=cache_j,
-                                    layer_seed=seed_off * 1000003)
+                                    layer_seed=seed_off * 1000003,
+                                    segment_ids=segment_ids)
             new_caches[f"sub_{j}"] = nc
             if m:
                 mets.append(m)
@@ -241,7 +247,8 @@ def forward(cfg, params, ctx: Ctx, *, tokens=None, embeds=None, caches=None,
         cache_r = None if caches is None else caches["tail"][f"tail_{r}"]
         x, nc, m = _apply_block(params["tail"][f"tail_{r}"], x, ctx, cfg, kind,
                                 positions=positions, cache=cache_r,
-                                layer_seed=i * 1000003)
+                                layer_seed=i * 1000003,
+                                segment_ids=segment_ids)
         new_tail[f"tail_{r}"] = nc
         if m:
             metrics_acc["moe_aux"] += m["moe_aux"]
@@ -267,16 +274,29 @@ def forward(cfg, params, ctx: Ctx, *, tokens=None, embeds=None, caches=None,
 # ---------------------------------------------------------------------------
 
 def loss_fn(cfg, params, batch, ctx: Ctx, *, aux_weight: float = 0.01):
-    """batch: {'tokens' or 'embeds', 'labels'}. Next-token CE for causal LMs,
+    """batch: {'tokens' or 'embeds', 'labels'} (+ optional 'segment_ids',
+    'positions' for packed batches). Next-token CE for causal LMs,
     per-position CE for encoders. Returns (loss, metrics)."""
+    seg = batch.get("segment_ids")
     logits, _, metrics = forward(cfg, params, ctx,
                                  tokens=batch.get("tokens"),
-                                 embeds=batch.get("embeds"))
+                                 embeds=batch.get("embeds"),
+                                 positions=batch.get("positions"),
+                                 segment_ids=seg)
     labels = batch["labels"]
+    weights = None
     if cfg.causal:
         logits = logits[:, :-1]
         labels = labels[:, 1:]
-    ce = layers.softmax_cross_entropy(logits, labels, cfg.vocab_size)
+        if seg is not None:
+            # a segment's last token must not be trained to predict the next
+            # segment's first token (and padding predicts nothing)
+            weights = ((seg[:, :-1] == seg[:, 1:]) &
+                       (seg[:, 1:] >= 0)).astype(jnp.float32)
+    elif seg is not None:
+        weights = (seg >= 0).astype(jnp.float32)
+    ce = layers.softmax_cross_entropy(logits, labels, cfg.vocab_size,
+                                      weights=weights)
     loss = ce
     if cfg.moe is not None:
         loss = loss + aux_weight * metrics["moe_aux"]

@@ -105,6 +105,9 @@ def make_train_step(cfg, *, mesh=None, opt: AdamWConfig = AdamWConfig(),
             "tokens": rules.sharding_for(("batch", None), None),
             "labels": rules.sharding_for(("batch", None), None),
             "embeds": rules.sharding_for(("batch", None, None), None),
+            # packed (varlen) batches ride along with the same batch sharding
+            "segment_ids": rules.sharding_for(("batch", None), None),
+            "positions": rules.sharding_for(("batch", None), None),
         }
         repl = NamedSharding(mesh, P())
         step_fn = jax.jit(

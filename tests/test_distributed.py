@@ -9,6 +9,10 @@ import textwrap
 
 import pytest
 
+# each test forks a fresh interpreter that re-imports jax with 8 fake devices
+# (~5-60s apiece) — slow tier; run with `pytest -m slow`
+pytestmark = pytest.mark.slow
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

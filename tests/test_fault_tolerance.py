@@ -54,6 +54,7 @@ def test_atomic_commit_ignores_partial(tmp_path):
     assert ckpt.latest_step(str(tmp_path)) == 3
 
 
+@pytest.mark.slow  # three 5-10 step training runs (~8s)
 def test_resume_determinism(tmp_path):
     """train(10) ≡ train(5) + restart + train(5..10), bit-for-bit."""
     t1 = _trainer(tmp_path / "a", ckpt_every=100)
@@ -68,6 +69,7 @@ def test_resume_determinism(tmp_path):
     assert max(errs) < 1e-6, f"resume diverged: {max(errs)}"
 
 
+@pytest.mark.slow  # two trainer builds → two train-step compiles (~6s)
 def test_preemption_checkpoints_and_exits(tmp_path):
     t = _trainer(tmp_path, ckpt_every=1000)
     t.hooks["pre_step"] = lambda step: (t.request_preemption()
@@ -91,6 +93,7 @@ def test_straggler_monitor_flags_outliers():
     assert len(mon.flagged) == 1 and mon.flagged[0][0] == 10
 
 
+@pytest.mark.slow  # 10 live train steps + an injected 0.5s stall
 def test_straggler_injection_in_trainer(tmp_path):
     import time
     t = _trainer(tmp_path, ckpt_every=1000)

@@ -11,12 +11,17 @@ from repro.kernels.flash_bwd import flash_bwd
 from repro.kernels.ops import mha, AttnConfig
 from repro.kernels.ref import naive_mha
 
+_BIG = pytest.mark.slow  # 256+-seq dual-pass interpret sweeps: slow tier
 CASES = [
     # b, hq, hkv, sq, skv, d, causal, window, drop
-    (2, 2, 2, 256, 256, 64, False, None, 0.0),
-    (2, 4, 2, 256, 256, 64, True, None, 0.0),    # GQA group-sum of dK/dV
+    pytest.param((2, 2, 2, 256, 256, 64, False, None, 0.0), marks=_BIG),
+    pytest.param((2, 4, 2, 256, 256, 64, True, None, 0.0),
+                 marks=_BIG),                    # GQA group-sum of dK/dV
+                                                 # (group-sum also default-
+                                                 # covered by test_edge_cases)
     (1, 2, 1, 128, 384, 128, True, None, 0.0),   # suffix query
-    (1, 2, 2, 256, 256, 64, True, 64, 0.0),      # sliding window
+    pytest.param((1, 2, 2, 256, 256, 64, True, 64, 0.0),
+                 marks=_BIG),                    # sliding window
     (1, 2, 2, 200, 200, 64, True, None, 0.0),    # padding
     (1, 2, 2, 128, 128, 64, False, None, 0.15),  # dropout replay in recompute
     (1, 2, 2, 128, 128, 80, True, None, 0.0),    # head_dim 80
@@ -31,7 +36,9 @@ def _ref_grads(q, k, v, do, causal, window, drop):
     return jax.grad(f, argnums=(0, 1, 2))(q, k, v)
 
 
-@pytest.mark.parametrize("case", CASES, ids=[str(c) for c in CASES])
+@pytest.mark.parametrize("case", CASES,
+                         ids=[str(getattr(c, "values", (c,))[0])
+                              for c in CASES])
 def test_bwd_matches_oracle_grads(rng_key, case):
     b, hq, hkv, sq, skv, d, causal, window, drop = case
     q, k, v, do = make_qkv(rng_key, b, hq, hkv, sq, skv, d)

@@ -9,11 +9,12 @@ from conftest import max_err
 from repro.kernels.ops import decode, decode_reference
 from repro.core.attention import spark_decode
 
+_BIG = pytest.mark.slow  # long-cache interpret sweeps: slow tier
 CASES = [
     # b, hq, hkv, skv, d, window, block_kv
-    (2, 8, 8, 512, 64, None, 128),
+    pytest.param((2, 8, 8, 512, 64, None, 128), marks=_BIG),
     (2, 8, 2, 512, 64, None, 128),       # GQA: group packed into MXU rows
-    (1, 4, 1, 1024, 128, None, 512),     # MQA
+    pytest.param((1, 4, 1, 1024, 128, None, 512), marks=_BIG),  # MQA
     (2, 4, 2, 512, 64, 256, 128),        # sliding window (recurrentgemma-style)
     (1, 4, 4, 300, 64, None, 128),       # non-divisible cache length
     (1, 10, 1, 256, 256, None, 128),     # recurrentgemma head geometry
@@ -28,7 +29,9 @@ def _mk(key, b, hq, hkv, skv, d):
     return q, k, v
 
 
-@pytest.mark.parametrize("case", CASES, ids=[str(c) for c in CASES])
+@pytest.mark.parametrize("case", CASES,
+                         ids=[str(getattr(c, "values", (c,))[0])
+                              for c in CASES])
 def test_decode_matches_oracle(rng_key, case):
     b, hq, hkv, skv, d, window, block = case
     q, k, v = _mk(rng_key, b, hq, hkv, skv, d)

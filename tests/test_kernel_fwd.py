@@ -13,22 +13,29 @@ from conftest import make_qkv, max_err
 from repro.kernels.flash_fwd import flash_fwd
 from repro.kernels.ref import naive_mha, online_mha
 
+_BIG = pytest.mark.slow  # 256+-seq interpret sweeps: slow tier
 CASES = [
     # b, hq, hkv, sq, skv, d, causal, window, bq, bkv
-    (2, 4, 4, 256, 256, 64, False, None, 128, 128),
+    pytest.param((2, 4, 4, 256, 256, 64, False, None, 128, 128), marks=_BIG),
     (2, 4, 2, 256, 256, 64, True, None, 128, 128),
     (1, 8, 1, 128, 128, 128, True, None, 64, 64),      # MQA
     (1, 2, 1, 128, 384, 128, True, None, 64, 128),     # suffix query (chunked prefill)
     (1, 2, 2, 256, 256, 64, True, 64, 64, 64),         # sliding window
-    (1, 2, 2, 256, 256, 64, False, 128, 128, 128),     # window, non-causal
+    pytest.param((1, 2, 2, 256, 256, 64, False, 128, 128, 128),
+                 marks=_BIG),                          # window, non-causal
     (1, 2, 2, 200, 200, 64, True, None, 128, 128),     # pad: seq not divisible
-    (1, 2, 2, 192, 320, 80, False, None, 64, 64),      # head_dim 80 (hubert)
+    pytest.param((1, 2, 2, 192, 320, 80, False, None, 64, 64),
+                 marks=_BIG),                          # head_dim 80 (hubert)
     (1, 1, 1, 64, 64, 256, True, None, 64, 64),        # head_dim 256 (recurrentgemma)
     (3, 2, 2, 96, 96, 64, True, None, 32, 32),         # odd batch, small blocks
 ]
 
 
-@pytest.mark.parametrize("case", CASES, ids=[str(c) for c in CASES])
+def _ids(cases):
+    return [str(getattr(c, "values", (c,))[0]) for c in cases]
+
+
+@pytest.mark.parametrize("case", CASES, ids=_ids(CASES))
 def test_fwd_matches_oracle(rng_key, case):
     b, hq, hkv, sq, skv, d, causal, window, bq, bkv = case
     q, k, v, _ = make_qkv(rng_key, b, hq, hkv, sq, skv, d)
@@ -41,7 +48,7 @@ def test_fwd_matches_oracle(rng_key, case):
     assert max_err(lse, lse_ref) < 2e-5
 
 
-@pytest.mark.parametrize("case", CASES[:4], ids=[str(c) for c in CASES[:4]])
+@pytest.mark.parametrize("case", CASES[:4], ids=_ids(CASES[:4]))
 def test_online_xla_matches_oracle(rng_key, case):
     """The dry-run XLA path implements the identical algorithm."""
     b, hq, hkv, sq, skv, d, causal, window, bq, bkv = case
