@@ -69,6 +69,29 @@ def spark_decode(q, k, v, *, impl: str = "xla", kv_len=None,
     return _xla_masked_decode(q, k, v, kv_len=kv_len, window=window, scale=scale)
 
 
+def spark_paged_decode(q, k_pages, v_pages, block_tables, kv_len, *,
+                       impl: str = "xla", window: Optional[int] = None,
+                       scale: Optional[float] = None):
+    """Single-token decode against a paged KV cache (serving subsystem).
+
+    q [B,Hq,D]; k_pages/v_pages [Hkv,num_pages,page_size,D] global page pool;
+    block_tables [B,T] int32 physical page per logical KV block (entries past a
+    row's allocation must hold valid ids — the pool's trash page 0); kv_len [B].
+
+    The Pallas path scalar-prefetches each row's block table and gathers its
+    pages HBM→VMEM inside the kernel pipeline; the XLA path materialises the
+    gather (jnp fancy-index) and reuses the contiguous masked decode — same
+    numerics, used by the CPU dry-run and as the serving fallback.
+    """
+    if impl in ("pallas", "pallas_interpret"):
+        return ops.paged_decode(q, k_pages, v_pages, block_tables, kv_len,
+                                window=window, scale=scale,
+                                interpret=(impl == "pallas_interpret"))
+    return _xla_masked_decode(q, ops.gather_pages(k_pages, block_tables),
+                              ops.gather_pages(v_pages, block_tables),
+                              kv_len=kv_len, window=window, scale=scale)
+
+
 def _xla_masked_decode(q, k, v, *, kv_len=None, window=None, scale=None):
     from repro.core.online_softmax import NEG_INF
     from repro.kernels.ref import _expand_kv

@@ -13,6 +13,16 @@ the TPU analogue of the paper packing multiple MMA computations per warp.
 
 Ragged batches: ``kv_len [B]`` (scalar-prefetch) masks each row's valid cache
 length, and fully-out-of-range KV blocks are skipped with ``pl.when``.
+
+Paged variant (:func:`flash_paged_decode`): the KV cache is a pool of
+fixed-size pages ``[Hkv, num_pages, page_size, D]`` shared by all sequences;
+each row's scalar-prefetched *block table* ``[B, T]`` names the physical page
+backing its ``ik``-th logical KV block.  The page id feeds straight into the
+K/V BlockSpec index map, so Mosaic's pipeline DMA gathers exactly the pages a
+row owns HBM→VMEM — the kernel body is the same online-softmax loop with
+``block_kv = page_size``.  Freed/unassigned table entries must point at a
+valid page (the pool reserves page 0 as a trash page): the index map runs for
+skipped blocks too, only the compute is gated by ``pl.when``.
 """
 
 from __future__ import annotations
@@ -83,6 +93,76 @@ def _decode_kernel(kv_len_ref,                    # scalar prefetch [B]
         l = l_ref[:, 0]
         l_safe = jnp.where(l == 0.0, 1.0, l)
         o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def _paged_decode_kernel(kv_len_ref, bt_ref, *rest, **kw):
+    # The block table is consumed entirely by the K/V BlockSpec index maps;
+    # inside the body the gathered page is indistinguishable from a contiguous
+    # cache block, so the online-softmax loop is shared with _decode_kernel.
+    del bt_ref
+    _decode_kernel(kv_len_ref, *rest, **kw)
+
+
+def flash_paged_decode(q, k_pages, v_pages, block_tables, kv_len, *,
+                       window: Optional[int] = None,
+                       scale: Optional[float] = None, acc_dtype=jnp.float32,
+                       interpret: bool = False):
+    """Flash-decode against a paged KV cache.
+
+    q: [B, Hq, D]; k_pages/v_pages: [Hkv, num_pages, page_size, D] (global page
+    pool); block_tables: [B, T] int32 physical page ids per logical KV block
+    (entries past a row's allocation must still be valid ids — use the pool's
+    trash page 0); kv_len: [B] int32 valid cache length per row.
+
+    Returns o: [B, Hq, D] in q.dtype.
+    """
+    b, hq, d = q.shape
+    hkv, _, page_size, _ = k_pages.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    t = block_tables.shape[1]
+
+    qg = q.reshape(b, hkv, group, d)
+    g_pad = max(8, group)
+    if g_pad != group:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad - group), (0, 0)))
+
+    kernel = functools.partial(_paged_decode_kernel, scale=scale, window=window,
+                               block_kv=page_size, acc_dtype=acc_dtype)
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, t),
+        in_specs=[
+            pl.BlockSpec((1, 1, g_pad, d), lambda b_, h, ik, kvl, bt: (b_, h, 0, 0)),
+            # the paged gather: logical block ik of row b lives in physical
+            # page bt[b, ik] — scalar-prefetched, so the DMA address is known
+            # before the body runs (same pattern as the kv_len ragged skip)
+            pl.BlockSpec((1, 1, page_size, d),
+                         lambda b_, h, ik, kvl, bt: (h, bt[b_, ik], 0, 0)),
+            pl.BlockSpec((1, 1, page_size, d),
+                         lambda b_, h, ik, kvl, bt: (h, bt[b_, ik], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g_pad, d),
+                               lambda b_, h, ik, kvl, bt: (b_, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((g_pad, d), jnp.float32),
+                        pltpu.VMEM((g_pad, LANES), jnp.float32),
+                        pltpu.VMEM((g_pad, LANES), jnp.float32)],
+    )
+    o = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g_pad, d), q.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(kv_len.astype(jnp.int32), block_tables.astype(jnp.int32), qg,
+      k_pages, v_pages)
+    return o[:, :, :group].reshape(b, hq, d)
 
 
 def flash_decode(q, k, v, *, kv_len=None, window: Optional[int] = None,

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_bwd import flash_bwd
 from repro.kernels.flash_fwd import flash_fwd
-from repro.kernels.decode import flash_decode
+from repro.kernels.decode import flash_decode, flash_paged_decode
 from repro.kernels import ref
 
 
@@ -116,6 +116,38 @@ def decode(q, k, v, *, kv_len=None, window=None, scale=None,
     """Single-token flash-decode. q: [B, Hq, D], k/v: [B, Hkv, S, D]."""
     return flash_decode(q, k, v, kv_len=kv_len, window=window, scale=scale,
                         block_kv=block_kv, interpret=interpret)
+
+
+def paged_decode(q, k_pages, v_pages, block_tables, kv_len, *, window=None,
+                 scale=None, interpret: bool = False):
+    """Single-token flash-decode over a paged KV cache.
+
+    q: [B, Hq, D]; k_pages/v_pages: [Hkv, num_pages, page_size, D];
+    block_tables: [B, T] int32 (trash-page ids past each row's allocation);
+    kv_len: [B] int32.
+    """
+    return flash_paged_decode(q, k_pages, v_pages, block_tables, kv_len,
+                              window=window, scale=scale, interpret=interpret)
+
+
+def gather_pages(pages, block_tables):
+    """Materialise a paged pool as a contiguous cache (XLA / oracle path).
+
+    pages [Hkv, num_pages, page_size, D], block_tables [B, T] →
+    [B, Hkv, T*page_size, D].
+    """
+    hkv, _, ps, d = pages.shape
+    b, t = block_tables.shape
+    g = pages[:, block_tables]                    # [Hkv, B, T, ps, D]
+    return g.transpose(1, 0, 2, 3, 4).reshape(b, hkv, t * ps, d)
+
+
+def paged_decode_reference(q, k_pages, v_pages, block_tables, kv_len, *,
+                           window=None, scale=None):
+    """Oracle: gather the pages contiguously, then the contiguous oracle."""
+    return decode_reference(q, gather_pages(k_pages, block_tables),
+                            gather_pages(v_pages, block_tables),
+                            kv_len=kv_len, window=window, scale=scale)
 
 
 def decode_reference(q, k, v, *, kv_len=None, window=None, scale=None):

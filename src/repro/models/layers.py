@@ -13,7 +13,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.attention import spark_attention, spark_decode
+from repro.core.attention import (spark_attention, spark_decode,
+                                  spark_paged_decode)
 
 
 # ---------------------------------------------------------------------------
@@ -146,13 +147,19 @@ def init_attention(key, cfg, dtype):
 
 
 def apply_attention(p, x, ctx: Ctx, cfg, *, positions=None, cache=None,
-                    layer_seed=0, segment_ids=None):
+                    layer_seed=0, segment_ids=None, paged=None):
     """x: [B, S, d]. Returns (out, new_cache).
 
-    cache (decode/prefill): dict with k/v [B, Hkv, S_max, D] and index scalar.
+    cache (decode/prefill): dict with k/v [B, Hkv, S_max, D] and index scalar,
+    OR a *paged* cache dict with k_pages/v_pages [Hkv, num_pages, page_size, D]
+    (a global page pool — see serving/paged_cache.py).
     segment_ids [B, S]: packed-batch segment ids — attention stays within a
-    segment (training path only; pair with per-segment ``positions`` so RoPE
-    restarts at each packed sequence).
+    segment (pair with per-segment ``positions`` so RoPE restarts at each
+    packed sequence). Training path, and packed *prefill* onto a paged cache.
+    paged: serving-side routing for paged caches —
+      prefill: {"dest": [B, S]} flat page-pool token slots per input token
+      (padding → the trash page), precomputed by BlockTables.prefill_dest;
+      decode: {"block_tables": [B, T], "kv_len": [B]}.
     """
     b, s, d = x.shape
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -180,11 +187,36 @@ def apply_attention(p, x, ctx: Ctx, cfg, *, positions=None, cache=None,
         # invariant over keys, so slot order inside the ring is irrelevant and
         # no window mask is needed (every resident entry is in-window).
         assert s == 1 and cache is not None
-        # same hazard as packed prefill below: the cache carries no segment
-        # structure, so a segment mask cannot be honored here — refuse it
+        # the cache carries no segment structure, so a segment mask cannot be
+        # honored here — packed prompts separate at prefill (paged path) and
+        # decode as independent batch rows
         assert segment_ids is None, \
-            "segment_ids is training-only: decode reads a cache with no " \
-            "segment structure (packed serving is a ROADMAP item)"
+            "segment_ids apply to training and packed prefill; decode rows " \
+            "are independent sequences"
+        if "k_pages" in cache:
+            # paged decode: append this token's K/V into its sequence's
+            # current page (block_tables/kv_len name the slot), then
+            # flash-decode with the block-table gather. Inactive slots point
+            # at the trash page and carry kv_len == 0 — their writes and
+            # logits are garbage by construction and ignored by the engine.
+            assert paged is not None, "paged cache needs block_tables/kv_len"
+            bt, kvl = paged["block_tables"], paged["kv_len"]
+            ps = cache["k_pages"].shape[2]
+            page = jnp.take_along_axis(bt, (kvl // ps)[:, None], axis=1)[:, 0]
+            dest = page * ps + kvl % ps                       # [B] token slots
+            ck = _scatter_pages(cache["k_pages"], dest,
+                                k[:, :, 0, :].transpose(1, 0, 2))
+            cv = _scatter_pages(cache["v_pages"], dest,
+                                v[:, :, 0, :].transpose(1, 0, 2))
+            # no ring buffer here — sliding windows mask inside the kernel
+            # (out-of-window pages could be freed early; ROADMAP follow-up)
+            o = spark_paged_decode(q[:, :, 0, :], ck, cv, bt, kvl + 1,
+                                   impl=ctx.impl,
+                                   window=cfg.attn_window)[:, :, None, :]
+            new_cache = {"k_pages": ck, "v_pages": cv}
+            o = ctx.c(o, "batch", "heads", "seq_full", "head_dim")
+            out = o.transpose(0, 2, 1, 3).reshape(b, s, hq * hd) @ p["wo"]
+            return ctx.c(out, "batch", "seq", "embed"), new_cache
         idx = cache["index"]
         cap = cache["k"].shape[2]
         slot = idx % cap if cfg.attn_window is not None else idx
@@ -210,12 +242,27 @@ def apply_attention(p, x, ctx: Ctx, cfg, *, positions=None, cache=None,
         o = o[:, :, None, :]
         new_cache = {"k": ck, "v": cv, "index": idx + 1}
     else:
-        if cache is not None:  # prefill (from position 0): fill the cache
-            # the cache stores no segment structure, so a packed prefill would
-            # silently decode across document boundaries later — refuse it
+        if cache is not None and "k_pages" in cache:
+            # segment-aware PACKED prefill: many prompts share one fused
+            # forward row; the PR-1 segment mask keeps their attention
+            # disjoint, and each token's K/V scatters into its own
+            # sequence's pages via the precomputed dest slots (padding
+            # tokens land in the trash page). One kernel launch fills every
+            # admitted prompt's cache — no per-prompt padding traffic.
+            assert paged is not None and "dest" in paged, \
+                "packed prefill onto a paged cache needs dest token slots"
+            dest = paged["dest"].reshape(-1)                  # [B*S]
+            ck = _scatter_pages(cache["k_pages"], dest,
+                                k.transpose(1, 0, 2, 3).reshape(hkv, b * s, hd))
+            cv = _scatter_pages(cache["v_pages"], dest,
+                                v.transpose(1, 0, 2, 3).reshape(hkv, b * s, hd))
+            new_cache = {"k_pages": ck, "v_pages": cv}
+        elif cache is not None:  # contiguous prefill (position 0): fill it
+            # this cache stores no segment structure, so a packed prefill
+            # would silently decode across prompt boundaries later — packed
+            # prefill requires the paged cache above
             assert segment_ids is None, \
-                "segment_ids is training-only: prefill/decode caches carry " \
-                "no segment structure (packed serving is a ROADMAP item)"
+                "packed prefill needs a paged cache (make_serve_steps paged=)"
             cap = cache["k"].shape[2]
             kc = k.astype(cache["k"].dtype)
             vc = v.astype(cache["v"].dtype)
@@ -246,3 +293,24 @@ def init_attn_cache(cfg, batch, max_len, dtype):
     shape = (batch, cfg.num_kv_heads, max_len, cfg.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
             "index": jnp.int32(0)}
+
+
+def _scatter_pages(pages, dest, vals):
+    """Write token rows into the page pool at flat token slots.
+
+    pages [Hkv, num_pages, page_size, D]; dest [N] int32 flat slots
+    (page * page_size + offset; duplicates only ever target the trash page);
+    vals [Hkv, N, D].
+    """
+    hkv, n_pages, ps, d = pages.shape
+    flat = pages.reshape(hkv, n_pages * ps, d)
+    return flat.at[:, dest].set(vals.astype(pages.dtype)).reshape(pages.shape)
+
+
+def init_paged_attn_cache(cfg, paged_cfg, dtype):
+    """One attention layer's page pool (shared by all sequences; page 0 is
+    the trash page — see serving/paged_cache.py)."""
+    shape = (cfg.num_kv_heads, paged_cfg.num_pages, paged_cfg.page_size,
+             cfg.head_dim)
+    return {"k_pages": jnp.zeros(shape, dtype),
+            "v_pages": jnp.zeros(shape, dtype)}

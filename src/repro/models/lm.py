@@ -55,13 +55,13 @@ def _init_block(key, cfg, kind: str, dtype):
 
 
 def _apply_block(p, x, ctx: Ctx, cfg, kind: str, *, positions, cache,
-                 layer_seed, segment_ids=None):
+                 layer_seed, segment_ids=None, paged=None):
     metrics = {}
     h = layers.rms_norm(x, p["norm1"])
     if kind == "attn":
         mixed, new_cache = layers.apply_attention(
             p["mixer"], h, ctx, cfg, positions=positions, cache=cache,
-            layer_seed=layer_seed, segment_ids=segment_ids)
+            layer_seed=layer_seed, segment_ids=segment_ids, paged=paged)
     elif kind == "rec":
         mixed, new_cache = rglru.apply_rglru(p["mixer"], h, ctx, cfg,
                                              cache=cache)
@@ -159,14 +159,18 @@ def _block_kinds(cfg):
 
 
 def forward(cfg, params, ctx: Ctx, *, tokens=None, embeds=None, caches=None,
-            positions=None, segment_ids=None):
+            positions=None, segment_ids=None, paged=None):
     """tokens [B,S] int32 OR embeds [B,S,FRONTEND_DIM]. Returns
     (logits [B,S,Vpad], new_caches, metrics).
 
     segment_ids [B,S]: packed-batch segment ids — attention blocks mask
     cross-segment pairs; pass per-segment ``positions`` alongside so RoPE
     restarts per packed sequence. Recurrent/SSM blocks carry state across
-    the whole row regardless (packing is an attention-family feature)."""
+    the whole row regardless (packing is an attention-family feature).
+
+    paged: paged-cache routing info forwarded to every attention block —
+    {"dest": [B,S]} for packed prefill, {"block_tables": [B,T],
+    "kv_len": [B]} for decode (see serving/paged_cache.py)."""
     period, n_super, rem = _block_kinds(cfg)
     if embeds is not None:
         x = embeds.astype(cfg.dtype) @ params["frontend_proj"]
@@ -190,7 +194,7 @@ def forward(cfg, params, ctx: Ctx, *, tokens=None, embeds=None, caches=None,
             x, nc, m = _apply_block(super_params[f"sub_{j}"], x, ctx, cfg, kind,
                                     positions=positions, cache=cache_j,
                                     layer_seed=seed_off * 1000003,
-                                    segment_ids=segment_ids)
+                                    segment_ids=segment_ids, paged=paged)
             new_caches[f"sub_{j}"] = nc
             if m:
                 mets.append(m)
@@ -248,7 +252,7 @@ def forward(cfg, params, ctx: Ctx, *, tokens=None, embeds=None, caches=None,
         x, nc, m = _apply_block(params["tail"][f"tail_{r}"], x, ctx, cfg, kind,
                                 positions=positions, cache=cache_r,
                                 layer_seed=i * 1000003,
-                                segment_ids=segment_ids)
+                                segment_ids=segment_ids, paged=paged)
         new_tail[f"tail_{r}"] = nc
         if m:
             metrics_acc["moe_aux"] += m["moe_aux"]
@@ -349,4 +353,62 @@ def decode_step(cfg, params, ctx: Ctx, token, caches, position):
     positions = jnp.broadcast_to(position, (b, 1)).astype(jnp.int32)
     logits, caches, _ = forward(cfg, params, ctx, tokens=token[:, None],
                                 caches=caches, positions=positions)
+    return logits[:, 0], caches
+
+
+# ---------------------------------------------------------------------------
+# paged serving: page-pool cache / packed prefill / block-table decode
+# ---------------------------------------------------------------------------
+
+def init_paged_cache(cfg, paged_cfg, dtype=None):
+    """Per-layer page pools [Hkv, num_pages, page_size, D] (no batch dim —
+    sequences share the pool via block tables). Attention-only archs:
+    recurrent/SSM state is per-row and packing would smear it across prompts."""
+    assert all(k == "attn" for k in cfg.block_pattern), \
+        f"paged serving supports attention-only archs, got {cfg.block_pattern}"
+    dtype = dtype or cfg.dtype
+    period, n_super, rem = _block_kinds(cfg)
+
+    def one():
+        return layers.init_paged_attn_cache(cfg, paged_cfg, dtype)
+
+    caches = {}
+    if n_super > 0:
+        caches["blocks"] = {
+            f"sub_{j}": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_super,) + x.shape).copy(),
+                one())
+            for j in range(period)}
+    if rem:
+        caches["tail"] = {f"tail_{r}": one() for r in range(rem)}
+    return caches
+
+
+def paged_prefill(cfg, params, ctx: Ctx, tokens, segment_ids, positions, dest,
+                  caches):
+    """Segment-aware packed prefill: many prompts in one fused forward.
+
+    tokens/segment_ids/positions [B, S] (prompts packed along S, -1 = pad,
+    per-prompt positions restarting at 0); dest [B, S] flat page-pool token
+    slots from BlockTables.prefill_dest. Returns (logits [B, S, Vpad], caches)
+    — the engine reads each prompt's last-token row.
+    """
+    logits, caches, _ = forward(cfg, params, ctx, tokens=tokens, caches=caches,
+                                positions=positions, segment_ids=segment_ids,
+                                paged={"dest": dest})
+    return logits, caches
+
+
+def paged_decode_step(cfg, params, ctx: Ctx, token, caches, block_tables,
+                      kv_len):
+    """One decode step over the paged cache. token [B] int32, block_tables
+    [B, T], kv_len [B] (current lengths; the new token lands at position
+    kv_len, and the engine increments host-side). → (logits [B,Vpad], caches).
+    """
+    ctx = layers.Ctx(**{**ctx.__dict__, "decode": True})
+    positions = kv_len[:, None].astype(jnp.int32)
+    logits, caches, _ = forward(
+        cfg, params, ctx, tokens=token[:, None], caches=caches,
+        positions=positions,
+        paged={"block_tables": block_tables, "kv_len": kv_len})
     return logits[:, 0], caches

@@ -144,7 +144,45 @@ class ServeArtifacts:
 def make_serve_steps(cfg, *, mesh=None, impl: str = "xla", max_len: int = 2048,
                      batch: int = 1, xla_chunk: int = 1024,
                      xla_unroll: bool = False,
-                     decode_write: str = "dus") -> ServeArtifacts:
+                     decode_write: str = "dus",
+                     paged=None) -> ServeArtifacts:
+    """paged: optional serving.PagedCacheConfig — switches the cache to a
+    global page pool with block-table decode and segment-aware packed
+    prefill (the serving subsystem's jitted steps; see docs/serving.md).
+    The paged signatures differ from the contiguous ones:
+
+      prefill_fn(params, tokens, segment_ids, positions, dest, caches)
+          → (logits [B,S,Vpad], caches)     # packed prompts, B prefill rows
+      decode_fn(params, token, caches, block_tables, kv_len)
+          → (logits [B,Vpad], caches)       # B = paged.max_batch slots
+    """
+    if paged is not None:
+        # single-host for now: block tables index a global page pool, which
+        # would need page-aligned sharding rules to distribute (ROADMAP)
+        assert mesh is None, "paged serving is single-host for now"
+
+        def cache_init():
+            return lm.init_paged_cache(cfg, paged)
+
+        def prefill_fn(params, tokens, segment_ids, positions, dest, caches):
+            ctx = _make_ctx(cfg, None, impl, 0, True, xla_chunk=xla_chunk,
+                            xla_unroll=xla_unroll)
+            return lm.paged_prefill(cfg, params, ctx, tokens, segment_ids,
+                                    positions, dest, caches)
+
+        def decode_fn(params, token, caches, block_tables, kv_len):
+            ctx = _make_ctx(cfg, None, impl, 0, True, xla_chunk=xla_chunk,
+                            decode_write=decode_write)
+            return lm.paged_decode_step(cfg, params, ctx, token, caches,
+                                        block_tables, kv_len)
+
+        # both steps donate the page pools (the dominant serving tensors):
+        # the caller always threads the returned caches into the next call
+        return ServeArtifacts(prefill_fn=jax.jit(prefill_fn,
+                                                 donate_argnums=(5,)),
+                              decode_fn=jax.jit(decode_fn, donate_argnums=(2,)),
+                              cache_init_fn=cache_init, rules=None)
+
     # prefill and decode get DIFFERENT activation rules: prefill behaves
     # like a forward train pass (FSDP weight gathers amortise over the whole
     # sequence); decode must avoid per-token weight/cache gathers.

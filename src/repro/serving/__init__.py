@@ -1,0 +1,30 @@
+"""Paged-KV serving subsystem: block-table caches + continuous batching.
+
+The decode-time KV cache is the dominant HBM tensor in serving; contiguous
+per-sequence caches must reserve ``max_batch × max_seq_len`` slots however
+short the actual requests are.  This package stores KV in fixed-size *pages*
+allocated on admission and freed on completion, with per-sequence block
+tables mapping logical KV blocks → physical pages (vLLM's PagedAttention
+idea, built on this repo's scalar-prefetch ragged-skip machinery):
+
+* ``paged_cache``  — page allocator, block tables, scatter-destination math.
+* ``scheduler``    — FCFS continuous batching: admit/evict between steps.
+* ``engine``       — the serving loop: segment-aware packed prefill (one
+                     fused forward fills many prompts' pages, PR-1 varlen
+                     masking) + block-table flash-decode each step.
+
+Kernel-level entry points live in ``core.attention.spark_paged_decode`` and
+``kernels/decode.py::flash_paged_decode``; jitted model steps come from
+``runtime.steps.make_serve_steps(..., paged=PagedCacheConfig(...))``.
+See docs/serving.md for the design and a quickstart.
+"""
+
+from repro.serving.engine import ServingEngine
+from repro.serving.paged_cache import (BlockTables, PageAllocator,
+                                       PagedCacheConfig, TRASH_PAGE)
+from repro.serving.scheduler import ActiveSeq, Request, Scheduler
+
+__all__ = [
+    "ServingEngine", "BlockTables", "PageAllocator", "PagedCacheConfig",
+    "TRASH_PAGE", "ActiveSeq", "Request", "Scheduler",
+]

@@ -1,0 +1,142 @@
+"""Paged KV cache bookkeeping: page allocator + per-sequence block tables.
+
+The device side of the paged cache is a *global page pool* per attention layer
+(``k_pages``/``v_pages`` of shape ``[Hkv, num_pages, page_size, D]``, built by
+``lm.init_paged_cache``).  This module owns everything host-side:
+
+* :class:`PageAllocator` — a free list over physical page ids.  Page 0 is
+  reserved as the **trash page**: freed/unassigned block-table entries and
+  padding-token writes all point there, so every table entry the kernel's
+  BlockSpec index map reads is a valid page id even for skipped blocks.
+* :class:`BlockTables` — per-slot (concurrent-sequence) block tables and
+  ``kv_len``, numpy-backed; admission reserves a sequence's full page budget
+  up front (prompt + generation) and release returns it, so a running batch
+  can never OOM mid-flight.  Also computes the flat scatter destinations used
+  by packed prefill and reports pool utilization.
+
+Everything here is plain numpy — the jitted steps receive the tables as fresh
+(tiny) device arrays each step, which is what lets the scheduler admit/evict
+between steps without recompiling anything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+TRASH_PAGE = 0  # page 0 absorbs padding writes and backs unassigned entries
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheConfig:
+    """Static geometry of the paged cache (hashable → usable inside jit)."""
+    page_size: int = 16          # tokens per KV page
+    num_pages: int = 64          # physical pages per layer, incl. trash page 0
+    max_batch: int = 4           # concurrent decode slots
+    max_pages_per_seq: int = 16  # block-table width T
+
+    @property
+    def max_seq_len(self) -> int:
+        return self.max_pages_per_seq * self.page_size
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+
+class PageAllocator:
+    """Free-list allocator over physical page ids 1..num_pages-1."""
+
+    def __init__(self, num_pages: int):
+        assert num_pages >= 2, "need at least the trash page + one real page"
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))  # pop() → 1 first
+        self.num_pages = num_pages
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n pages, or None (and no side effect) if the pool can't cover it."""
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages: List[int]):
+        for p in pages:
+            assert p != TRASH_PAGE, "the trash page is never allocated"
+        self._free.extend(pages)
+
+
+class BlockTables:
+    """Per-slot block tables + lengths over one shared :class:`PageAllocator`."""
+
+    def __init__(self, cfg: PagedCacheConfig):
+        self.cfg = cfg
+        self.allocator = PageAllocator(cfg.num_pages)
+        self.tables = np.full((cfg.max_batch, cfg.max_pages_per_seq),
+                              TRASH_PAGE, np.int32)
+        self.kv_len = np.zeros((cfg.max_batch,), np.int32)
+        self._owned: Dict[int, List[int]] = {}   # slot → allocated page ids
+
+    def free_slots(self) -> List[int]:
+        return [s for s in range(self.cfg.max_batch) if s not in self._owned]
+
+    def admit(self, slot: int, n_tokens: int) -> bool:
+        """Reserve pages for a sequence's full lifetime (prompt + gen)."""
+        assert slot not in self._owned
+        if n_tokens > self.cfg.max_seq_len:
+            raise ValueError(
+                f"sequence of {n_tokens} tokens exceeds the block-table "
+                f"capacity {self.cfg.max_seq_len} (raise max_pages_per_seq)")
+        pages = self.allocator.alloc(self.cfg.pages_for(n_tokens))
+        if pages is None:
+            return False
+        self._owned[slot] = pages
+        self.tables[slot] = TRASH_PAGE
+        self.tables[slot, :len(pages)] = pages
+        self.kv_len[slot] = 0
+        return True
+
+    def release(self, slot: int):
+        self.allocator.free(self._owned.pop(slot))
+        self.tables[slot] = TRASH_PAGE
+        self.kv_len[slot] = 0
+
+    def prefill_dest(self, segment_ids_row: np.ndarray,
+                     slots: List[int]) -> np.ndarray:
+        """Flat page-pool token slots for one packed prefill row.
+
+        segment_ids_row [S]: ids 0..n-1 over contiguous prompt spans, -1 pad;
+        slots[i]: the cache slot backing segment i.  Returns dest [S] int32 —
+        token t of segment i lands in ``table[t // ps] * ps + t % ps`` of slot
+        ``slots[i]``'s table; padding lands in the trash page's slot 0.
+        """
+        ps = self.cfg.page_size
+        dest = np.zeros(segment_ids_row.shape, np.int32)  # pad → trash slot 0
+        for i, slot in enumerate(slots):
+            (pos,) = np.nonzero(segment_ids_row == i)
+            local = np.arange(len(pos))
+            dest[pos] = self.tables[slot, local // ps] * ps + local % ps
+        return dest
+
+    def append_dest_ok(self, slot: int) -> bool:
+        """Does the next token's write position fall inside owned pages?"""
+        page = int(self.kv_len[slot]) // self.cfg.page_size
+        return page < len(self._owned.get(slot, ()))
+
+    def utilization(self) -> Dict[str, float]:
+        """Live tokens vs. reserved page capacity (the paged-vs-contiguous
+        memory argument: contiguous reserves max_batch × max_seq_len always)."""
+        allocated = sum(len(p) for p in self._owned.values())
+        cap = allocated * self.cfg.page_size
+        used = int(self.kv_len.sum())
+        return {
+            "used_tokens": float(used),
+            "allocated_tokens": float(cap),
+            "allocated_pages": float(allocated),
+            "pool_pages": float(self.cfg.num_pages - 1),
+            "utilization": used / cap if cap else 0.0,
+            "pool_fraction": allocated / (self.cfg.num_pages - 1),
+        }

@@ -1,0 +1,97 @@
+"""Continuous-batching scheduler over the paged KV cache.
+
+Requests arrive with a prompt and a generation budget; between decode steps
+the engine asks the scheduler to (a) evict finished sequences — returning
+their pages to the pool — and (b) admit waiting ones FCFS while both a free
+decode slot and the sequence's *full* page budget (prompt + generation,
+reserved up front by :class:`BlockTables`) are available.  Admission stops at
+the first request that doesn't fit, preserving arrival order; nothing is ever
+preempted mid-generation, so no re-prefill path is needed.
+
+The scheduler is pure host-side state — it never touches device arrays.  The
+engine turns admissions into packed prefill calls and the active set into the
+per-step ``block_tables``/``kv_len`` arrays.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, Dict, List
+
+import numpy as np
+
+from repro.serving.paged_cache import BlockTables, PagedCacheConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray            # [prompt_len] int32
+    max_new_tokens: int
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.shape[0])
+
+    @property
+    def budget_tokens(self) -> int:
+        # KV writes over the lifetime: the prompt plus every decode-step input
+        # token (prompt + max_new - 1); reserve one spare to keep the math
+        # obviously safe.
+        return self.prompt_len + self.max_new_tokens
+
+
+@dataclasses.dataclass
+class ActiveSeq:
+    request: Request
+    slot: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.request.max_new_tokens
+
+
+class Scheduler:
+    def __init__(self, cfg: PagedCacheConfig):
+        self.cfg = cfg
+        self.tables = BlockTables(cfg)
+        self.waiting: Deque[Request] = collections.deque()
+        self.active: Dict[int, ActiveSeq] = {}    # slot → sequence
+        self.finished: List[ActiveSeq] = []
+
+    @property
+    def idle(self) -> bool:
+        return not self.waiting and not self.active
+
+    def submit(self, req: Request):
+        if req.budget_tokens > self.cfg.max_seq_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+generation of {req.budget_tokens} "
+                f"tokens can never fit max_seq_len={self.cfg.max_seq_len}")
+        self.waiting.append(req)
+
+    def evict_finished(self) -> List[ActiveSeq]:
+        done = [seq for seq in self.active.values() if seq.done]
+        for seq in done:
+            del self.active[seq.slot]
+            self.tables.release(seq.slot)
+            self.finished.append(seq)
+        return done
+
+    def admit(self) -> List[ActiveSeq]:
+        """FCFS admission: free slot + full page budget, else stop."""
+        admitted = []
+        free = self.tables.free_slots()
+        while self.waiting and free:
+            req = self.waiting[0]
+            slot = free[0]
+            if not self.tables.admit(slot, req.budget_tokens):
+                break  # pool exhausted — keep arrival order, wait for evictions
+            self.waiting.popleft()
+            free.pop(0)
+            seq = ActiveSeq(request=req, slot=slot)
+            self.active[slot] = seq
+            admitted.append(seq)
+        return admitted

@@ -1,0 +1,72 @@
+#!/usr/bin/env python
+"""Docs drift guard (CI `docs` job; run locally with `python tools/check_docs.py`).
+
+Two cheap checks that catch the usual ways docs rot:
+
+1. every relative markdown link in README.md and docs/*.md resolves to a file
+   or directory in the repo (anchors and external URLs are skipped);
+2. every package under src/repro/ is mentioned in docs/architecture.md, so a
+   new subsystem cannot land undocumented.
+
+Exit code 0 = clean; 1 = drift, with one line per problem.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_links() -> list:
+    problems = []
+    md_files = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+    for md in md_files:
+        if not md.exists():
+            problems.append(f"{md.relative_to(ROOT)}: file missing")
+            continue
+        for lineno, line in enumerate(md.read_text().splitlines(), 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                path = target.split("#", 1)[0]
+                if not path:      # pure in-page anchor
+                    continue
+                resolved = (md.parent / path).resolve()
+                if not resolved.exists():
+                    problems.append(
+                        f"{md.relative_to(ROOT)}:{lineno}: dead link "
+                        f"'{target}'")
+    return problems
+
+
+def check_architecture_coverage() -> list:
+    arch = ROOT / "docs" / "architecture.md"
+    if not arch.exists():
+        return ["docs/architecture.md: file missing"]
+    text = arch.read_text()
+    problems = []
+    for pkg in sorted((ROOT / "src" / "repro").iterdir()):
+        if not pkg.is_dir() or pkg.name.startswith("__"):
+            continue
+        if f"{pkg.name}/" not in text and f"`{pkg.name}`" not in text:
+            problems.append(
+                f"docs/architecture.md: package src/repro/{pkg.name} is "
+                f"not mentioned")
+    return problems
+
+
+def main() -> int:
+    problems = check_links() + check_architecture_coverage()
+    for p in problems:
+        print(p)
+    print(f"check_docs: {'FAIL' if problems else 'ok'} "
+          f"({len(problems)} problem(s))")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
