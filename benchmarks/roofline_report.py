@@ -1,4 +1,4 @@
-"""Aggregate the dry-run artifacts into the EXPERIMENTS.md roofline table.
+"""Aggregate the dry-run artifacts into the roofline summary table.
 
 Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and prints:
   * the per-cell three-term roofline table (single-pod),

@@ -12,6 +12,12 @@ Sections:
 * ``step`` — one decode step over B ragged sequences, contiguous vs. paged:
   µs/step, decode throughput (tok/s), reserved KV bytes and utilization
   (live tokens / reserved capacity) for each layout.
+* ``sharded step`` — the same paged decode with the pool page-sharded over a
+  ("model",) mesh of all visible devices (per-shard local attention +
+  online-softmax partial merge, distributed/paged.py): µs/step and the
+  per-shard pool bytes. Run with fake devices to see real sharding, e.g.
+  XLA_FLAGS=--xla_force_host_platform_device_count=2; on one device the
+  mesh is (1,) and the numbers isolate the shard_map/merge overhead.
 * ``engine`` (--engine) — the full continuous-batching engine on a smoke
   model: end-to-end tok/s and mean pool utilization.
 
@@ -45,6 +51,9 @@ def main():
     ap.add_argument("--heads", type=int, default=8)
     ap.add_argument("--kv-heads", type=int, default=2)
     ap.add_argument("--head-dim", type=int, default=64)
+    ap.add_argument("--shards", type=int, default=0,
+                    help="pool shards for the sharded-step section "
+                         "(default: all visible devices)")
     ap.add_argument("--engine", action="store_true",
                     help="also run the continuous-batching engine end to end")
     args = ap.parse_args()
@@ -71,18 +80,8 @@ def main():
     # ---- paged: rows own only the pages that cover their tokens ----
     pages_per_row = -(-kv_len // ps)
     num_pages = 1 + int(pages_per_row.sum())        # + trash page 0
-    # scatter the same contiguous contents into a shuffled page pool
-    perm = rs.permutation(num_pages - 1) + 1
-    tables = np.zeros((b, max_pages), np.int32)
-    k_pool = np.zeros((hkv, num_pages, ps, d), np.float32)
-    v_pool = np.zeros((hkv, num_pages, ps, d), np.float32)
-    nxt = 0
-    for i in range(b):
-        for t in range(int(pages_per_row[i])):
-            pg = int(perm[nxt]); nxt += 1
-            tables[i, t] = pg
-            k_pool[:, pg] = np.asarray(kc[i, :, t * ps:(t + 1) * ps])
-            v_pool[:, pg] = np.asarray(vc[i, :, t * ps:(t + 1) * ps])
+    k_pool, v_pool, tables = build_pool(rs, kc, vc, kv_len, num_pages,
+                                        max_pages, ps, n_shards=1)
     kp, vp = jnp.asarray(k_pool), jnp.asarray(v_pool)
     bt = jnp.asarray(tables)
     paged = jax.jit(lambda q_, k_, v_, bt_, l_: spark_paged_decode(
@@ -103,8 +102,65 @@ def main():
     row("serving_paged/kv_bytes_ratio", 0.0,
         f"contiguous/paged={bytes_c / bytes_p:.2f}x")
 
+    sharded_step_bench(args, rs, q, kc, vc, kv_len, contig)
+
     if args.engine:
         engine_bench(rs)
+
+
+def build_pool(rs, kc, vc, kv_len, num_pages, max_pages, ps, n_shards):
+    """Scatter contiguous KV contents into a shuffled page pool.
+
+    The per-shard trash pages (global s·num_pages/n_shards; just page 0 when
+    n_shards == 1) are left unassigned. Returns (k_pool, v_pool, tables).
+    """
+    b, hkv, _, d = kc.shape
+    per = num_pages // n_shards
+    usable = [p for p in range(num_pages) if p % per != 0]
+    perm = rs.permutation(len(usable))
+    pages_per_row = -(-kv_len // ps)
+    tables = np.zeros((b, max_pages), np.int32)
+    k_pool = np.zeros((hkv, num_pages, ps, d), np.float32)
+    v_pool = np.zeros((hkv, num_pages, ps, d), np.float32)
+    nxt = 0
+    for i in range(b):
+        for t in range(int(pages_per_row[i])):
+            pg = usable[int(perm[nxt])]; nxt += 1
+            tables[i, t] = pg
+            k_pool[:, pg] = np.asarray(kc[i, :, t * ps:(t + 1) * ps])
+            v_pool[:, pg] = np.asarray(vc[i, :, t * ps:(t + 1) * ps])
+    return k_pool, v_pool, tables
+
+
+def sharded_step_bench(args, rs, q, kc, vc, kv_len, contig):
+    """Paged decode with the pool page-sharded over all visible devices."""
+    from repro.distributed.paged import paged_decode_sharded, pool_sharding
+    from repro.launch.mesh import make_mesh
+
+    n_shards = args.shards or len(jax.devices())
+    mesh = make_mesh((n_shards,), ("model",))
+    b, hkv, d, ps = args.batch, args.kv_heads, args.head_dim, args.page_size
+    max_pages = -(-args.max_len // ps)
+    pages_per_row = -(-kv_len // ps)
+    # page-aligned pool: one trash page per shard (local page 0), padded so
+    # the shard split divides evenly
+    num_pages = n_shards + int(pages_per_row.sum())
+    num_pages = -(-num_pages // n_shards) * n_shards
+    per = num_pages // n_shards
+    k_pool, v_pool, tables = build_pool(rs, kc, vc, kv_len, num_pages,
+                                        max_pages, ps, n_shards=n_shards)
+    kp = jax.device_put(jnp.asarray(k_pool), pool_sharding(mesh))
+    vp = jax.device_put(jnp.asarray(v_pool), pool_sharding(mesh))
+    bt, kvl = jnp.asarray(tables), jnp.asarray(kv_len)
+    sharded = jax.jit(lambda q_, k_, v_, bt_, l_: paged_decode_sharded(
+        q_, k_, v_, bt_, l_, mesh=mesh, impl=args.impl))
+    us_s = time_fn(sharded, q, kp, vp, bt, kvl)
+    err = float(jnp.abs(sharded(q, kp, vp, bt, kvl)
+                        - contig(q, kc, vc, kvl)).max())
+    bytes_per_shard = 2 * hkv * per * ps * d * 4
+    row("serving_paged/sharded_step", us_s,
+        f"tok_s={b / (us_s * 1e-6):.0f};shards={n_shards};"
+        f"kv_bytes_per_shard={bytes_per_shard};merge_err={err:.1e}")
 
 
 def engine_bench(rs):

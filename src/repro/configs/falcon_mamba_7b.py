@@ -12,7 +12,7 @@ CONFIG = ArchConfig(
     mamba=MambaConfig(d_inner=8192, ssm_state=16, conv_kernel=4),
     sub_quadratic=True,
     notes="mamba1 arch, attention-free [arXiv:2410.05355; unverified]. "
-          "SparkAttention inapplicable (DESIGN.md SS-Arch-applicability); "
+          "SparkAttention inapplicable (attention-free arch); "
           "arch fully supported via the selective-scan mixer.",
 )
 SMOKE = dataclasses.replace(

@@ -8,9 +8,11 @@ CONFIG = ArchConfig(
     name="granite-3-2b", family="dense",
     num_layers=40, d_model=2048, num_heads=32, num_kv_heads=8,
     d_ff=8192, vocab_size=49155,
-    sharding_profile="fsdp",  # TP-SP activation comm dominates a 2B model:
+    sharding_profile="fsdp",  # scale annotation: perf iteration 6 measured
                               # collective 3.09s->0.61s, MFU 10.6%->54.2%
-                              # (EXPERIMENTS SSPerf iteration 6)
+                              # under the launcher's ZeRO-3 hillclimb override;
+                              # without fsdp=True the rule engine keeps TP-SP
+                              # (distributed/sharding.py profile gate)
     notes="GQA dense decoder [hf:ibm-granite/granite-3.0-2b-base; hf]. "
           "vocab 49155 is padded to a multiple of the model axis by the "
           "sharding rules.",

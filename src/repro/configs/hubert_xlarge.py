@@ -9,7 +9,9 @@ CONFIG = ArchConfig(
     num_layers=48, d_model=1280, num_heads=16, num_kv_heads=16,
     d_ff=5120, vocab_size=504,
     causal=False,                 # encoder-only: no decode shapes
-    sharding_profile="fsdp",      # 5.4x train step (SSPerf iteration 6)
+    sharding_profile="fsdp",      # scale annotation (perf iteration 6:
+                                  # 5.4x train step under the ZeRO-3 override);
+                                  # engine keeps TP-SP without fsdp=True
     frontend="audio",             # frame embeddings provided by the stub
     mlp_type="gelu",
     notes="encoder-only audio backbone, w2v2 arch [arXiv:2106.07447; "

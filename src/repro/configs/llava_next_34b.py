@@ -11,7 +11,7 @@ CONFIG = ArchConfig(
     frontend="vision",   # anyres patch embeddings provided by the stub frontend
     fsdp=True,
     ctx_parallel_attn=True,  # 56 heads do not divide the 16-way model axis
-                             # (+8x prefill compute - EXPERIMENTS SSPerf it.4)
+                             # (+8x prefill compute - perf iteration 4)
     notes="decoder LM backbone of LLaVA-NeXT-34B (anyres tiling handled by the "
           "vision stub; input_specs() provides precomputed patch embeddings) "
           "[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]",

@@ -14,7 +14,7 @@ CONFIG = ArchConfig(
     notes="qk-norm + GQA [hf:Qwen/Qwen3-8B; hf]. fsdp=True: 40 heads do not "
           "divide the 16-way model axis, so attention projections cannot TP "
           "- without FSDP they (and their optimizer state) replicate to "
-          "46 GB/device (caught by the v0 dry-run, EXPERIMENTS.md S2).",
+          "46 GB/device (caught by the v0 dry-run).",
 )
 SMOKE = dataclasses.replace(
     CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,

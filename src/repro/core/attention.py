@@ -92,7 +92,51 @@ def spark_paged_decode(q, k_pages, v_pages, block_tables, kv_len, *,
                               kv_len=kv_len, window=window, scale=scale)
 
 
+def spark_paged_decode_partials(q, k_pages, v_pages, block_tables, kv_len, *,
+                                block_valid=None, impl: str = "xla",
+                                window: Optional[int] = None,
+                                scale: Optional[float] = None):
+    """Paged decode returning the un-finalized online-softmax state.
+
+    The building block of *distributed* paged serving: each shard of a
+    page-sharded pool calls this with its local pages, a block table remapped
+    to local ids, and ``block_valid [B, T]`` marking the entries it owns
+    (invalid entries point at the local trash page and contribute nothing).
+    Returns f32 ``(acc [B,Hq,D], m [B,Hq], l [B,Hq])``; merge shards with the
+    ``online_softmax`` algebra and finalize once (see distributed/paged.py).
+    """
+    if impl in ("pallas", "pallas_interpret"):
+        return ops.paged_decode_partials(
+            q, k_pages, v_pages, block_tables, kv_len,
+            block_valid=block_valid, window=window, scale=scale,
+            interpret=(impl == "pallas_interpret"))
+    ps = k_pages.shape[2]
+    pos_valid = None
+    if block_valid is not None:
+        pos_valid = jnp.repeat(block_valid.astype(bool), ps, axis=1)
+    return _xla_masked_decode_partials(
+        q, ops.gather_pages(k_pages, block_tables),
+        ops.gather_pages(v_pages, block_tables),
+        kv_len=kv_len, window=window, scale=scale, pos_valid=pos_valid)
+
+
 def _xla_masked_decode(q, k, v, *, kv_len=None, window=None, scale=None):
+    from repro.core import online_softmax as osm
+    acc, m, l = _xla_masked_decode_partials(q, k, v, kv_len=kv_len,
+                                            window=window, scale=scale)
+    o, _ = osm.finalize(osm.SoftmaxState(m=m, l=l, acc=acc),
+                        out_dtype=q.dtype)
+    return o
+
+
+def _xla_masked_decode_partials(q, k, v, *, kv_len=None, window=None,
+                                scale=None, pos_valid=None):
+    """Masked single-query decode, stopping at the un-normalised
+    ``online_softmax`` state (acc, m, l) over the positions this caller is
+    allowed to see (``pos_valid [B, Skv]`` gates shard-local ownership).
+    Fully-masked rows keep ``m == NEG_INF, l == 0, acc == 0`` so they merge
+    and finalize to exact zeros, matching the kernels' convention.
+    ``_xla_masked_decode`` is this plus ``online_softmax.finalize``."""
     from repro.core.online_softmax import NEG_INF
     from repro.kernels.ref import _expand_kv
     b, hq, d = q.shape
@@ -109,7 +153,12 @@ def _xla_masked_decode(q, k, v, *, kv_len=None, window=None, scale=None):
     allowed = kp < L
     if window is not None:
         allowed &= kp > (L - 1) - window
+    if pos_valid is not None:
+        allowed &= pos_valid[:, None, :]
     s = jnp.where(allowed, s, NEG_INF)
-    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
-    p = p / jnp.sum(p, axis=-1, keepdims=True)
-    return jnp.einsum("bhk,bhkd->bhd", p, vf.astype(jnp.float32)).astype(q.dtype)
+    m = jnp.max(s, axis=-1)
+    m_safe = jnp.where(m == NEG_INF, 0.0, m)   # exp(NEG_INF - NEG_INF) == 1
+    p = jnp.where(allowed, jnp.exp(s - m_safe[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhk,bhkd->bhd", p, vf.astype(jnp.float32))
+    return acc, m, l

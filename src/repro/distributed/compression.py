@@ -32,9 +32,8 @@ def quantize_psum(g: jnp.ndarray, axis_names, error: jnp.ndarray
                  -127, 127).astype(jnp.int8)
     new_error = g.astype(jnp.float32) + error - q.astype(jnp.float32) * scale
     total = jax.lax.psum(q.astype(jnp.int32), axis_names)
-    n = 1
-    for a in (axis_names if isinstance(axis_names, tuple) else (axis_names,)):
-        n *= jax.lax.axis_size(a)
+    # psum of 1 = axis size (jax.lax.axis_size only exists on newer jax)
+    n = jax.lax.psum(1, axis_names)
     return total.astype(jnp.float32) * scale / n, new_error
 
 

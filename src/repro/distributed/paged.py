@@ -1,0 +1,200 @@
+"""Distributed paged-KV serving: page-aligned pool sharding + sharded decode.
+
+The serving page pool (``[Hkv, num_pages, page_size, D]`` per attention
+layer — see serving/paged_cache.py) distributes over the mesh's **model**
+axis by sharding the ``num_pages`` dim: sharding is at page granularity, so
+pages never straddle shards, and block tables keep *global* page ids — the
+host-side allocator/scheduler are unchanged.
+
+Two invariants make the distribution correct:
+
+* **Page alignment** — ``num_pages`` must divide by the shard count
+  (:func:`pages_per_shard` validates); shard ``s`` owns global pages
+  ``[s·P, (s+1)·P)`` where ``P = num_pages // n_shards``.
+* **A trash page per shard** — global page ``s·P`` (local page 0 of shard
+  ``s``) is reserved: every shard remaps table entries it does not own to its
+  local page 0, and scatter writes for tokens it does not own land there, so
+  every local table entry and every local write stays a valid local page.
+  ``PagedCacheConfig(num_shards=n)`` keeps the allocator away from these ids;
+  global page 0 remains THE trash page for host-side bookkeeping.
+
+Decode runs as per-shard local attention + online-softmax partial merge
+(exactly the seq-sharded contiguous-decode rule in sharding.py, applied to
+pages): each shard computes the un-normalised ``(acc, m, l)`` state over its
+own pages (``spark_paged_decode_partials``), then tiny ``[B,H]`` /
+``[B,H,D]`` all-reduces merge the states — never the pool. Without the
+partial merge, GSPMD would all-gather every sequence's whole cache per token.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.attention import spark_paged_decode_partials
+
+POOL_AXIS = "model"  # mesh axis the page dim shards over (TP axis)
+
+
+def pool_shard_count(mesh: Optional[Mesh], axis: str = POOL_AXIS) -> int:
+    if mesh is None:
+        return 1
+    return int(mesh.shape.get(axis, 1))
+
+
+def pages_per_shard(num_pages: int, n_shards: int) -> int:
+    """Pages owned by each shard; validates the page-aligned-split invariant."""
+    if num_pages % n_shards != 0:
+        raise ValueError(
+            f"num_pages={num_pages} must divide by the pool shard count "
+            f"{n_shards}: sharding is at page granularity (pages never "
+            f"straddle shards)")
+    per = num_pages // n_shards
+    if per < 2:
+        raise ValueError(
+            f"{per} page(s) per shard leaves no usable page beside the "
+            f"per-shard trash page — grow num_pages or shrink the mesh")
+    return per
+
+
+def pool_sharding(mesh: Mesh, axis: str = POOL_AXIS) -> NamedSharding:
+    """NamedSharding for one [Hkv, num_pages, page_size, D] page pool."""
+    return NamedSharding(mesh, P(None, axis, None, None))
+
+
+def _local_ids(bt, n_local: int, shard):
+    """Global table → (local table, ownership mask) for one pool shard."""
+    owner = bt // n_local
+    local = owner == shard
+    # non-local entries → local trash page 0 (a valid local id by invariant)
+    return jnp.where(local, bt % n_local, 0), local.astype(jnp.int32)
+
+
+def _scatter_local(pages, dest, vals, n_local_slots: int, shard):
+    """Shard-local flat-slot scatter: tokens owned elsewhere hit local trash.
+
+    pages [Hkv, P_local, ps, D] (this shard's slice); dest [N] *global* flat
+    token slots (page·page_size + offset); vals [Hkv, N, D].
+    """
+    hkv, p_local, ps, d = pages.shape
+    owner = dest // n_local_slots
+    local_dest = jnp.where(owner == shard, dest % n_local_slots, 0)
+    flat = pages.reshape(hkv, p_local * ps, d)
+    return flat.at[:, local_dest].set(vals.astype(pages.dtype)).reshape(
+        pages.shape)
+
+
+def merge_partials(acc, m, l, axis_name: str, out_dtype=None):
+    """Cross-shard online-softmax merge + finalize (paper Eq. 3 over shards).
+
+    acc [B,H,D], m/l [B,H] — each shard's local state. The collective form of
+    ``online_softmax.merge`` (pmax for the max, the exp-rescaled sums as
+    psums), finalized by ``online_softmax.finalize`` so rows with no valid
+    positions anywhere (inactive decode slots) come out as exact zeros. The
+    collectives move O(B·H·D) bytes per layer per token. NEG_INF is a large
+    *finite* negative, so the exp rescale stays NaN-free on empty shards.
+    """
+    from repro.core import online_softmax as osm
+    m_g = jax.lax.pmax(m, axis_name)
+    a = jnp.exp(m - m_g)          # empty shards: a→0 (or l==0 makes it inert)
+    state = osm.SoftmaxState(
+        m=m_g,
+        l=jax.lax.psum(l * a, axis_name),
+        acc=jax.lax.psum(acc * a[..., None], axis_name))
+    o, _ = osm.finalize(state, out_dtype=out_dtype)
+    return o
+
+
+def scatter_pages_sharded(pages, dest, vals, *, mesh: Mesh,
+                          axis: str = POOL_AXIS):
+    """Sharded counterpart of layers._scatter_pages (packed-prefill writes).
+
+    pages [Hkv, num_pages, ps, D] (page dim sharded over ``axis``); dest [N]
+    global flat token slots; vals [Hkv, N, D] (replicated). Each shard keeps
+    only the writes that land in its pages; the rest go to its trash page.
+    """
+    from repro.distributed import shard_map
+    n_shards = pool_shard_count(mesh, axis)
+    n_local_slots = (pages.shape[1] // n_shards) * pages.shape[2]
+
+    def local(pages_l, dest_l, vals_l):
+        shard = jax.lax.axis_index(axis)
+        return _scatter_local(pages_l, dest_l, vals_l, n_local_slots, shard)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(None, axis), P(), P()),
+                     out_specs=P(None, axis))(pages, dest, vals)
+
+
+def paged_decode_sharded(q, k_pages, v_pages, block_tables, kv_len, *,
+                         mesh: Mesh, axis: str = POOL_AXIS, impl: str = "xla",
+                         window: Optional[int] = None,
+                         scale: Optional[float] = None):
+    """Sharded paged decode, no append: the distributed counterpart of
+    ``spark_paged_decode`` (q replicated, pool page-sharded over ``axis``,
+    global block tables). Benchmark/tooling entry point — the serving step
+    uses :func:`paged_append_decode_sharded`, which also writes the new
+    token's K/V."""
+    from repro.distributed import shard_map
+    n_local = pages_per_shard(k_pages.shape[1], pool_shard_count(mesh, axis))
+
+    def local(q_l, kp, vp, bt, kvl):
+        shard = jax.lax.axis_index(axis)
+        bt_local, valid = _local_ids(bt, n_local, shard)
+        acc, m, l = spark_paged_decode_partials(
+            q_l, kp, vp, bt_local, kvl, block_valid=valid, impl=impl,
+            window=window, scale=scale)
+        return merge_partials(acc, m, l, axis, out_dtype=q_l.dtype)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(), P(None, axis), P(None, axis), P(), P()),
+                     out_specs=P())(q, k_pages, v_pages,
+                                    block_tables.astype(jnp.int32),
+                                    kv_len.astype(jnp.int32))
+
+
+def paged_append_decode_sharded(q, k_new, v_new, k_pages, v_pages,
+                                block_tables, kv_len, *, mesh: Mesh,
+                                axis: str = POOL_AXIS, impl: str = "xla",
+                                window: Optional[int] = None,
+                                scale: Optional[float] = None):
+    """One sharded paged-decode step: append this token's K/V, then attend.
+
+    q/k_new/v_new [B, H(kv), D] (replicated activations — the decode rules
+    replicate q and gather the per-token projection rows, see sharding.py);
+    k_pages/v_pages [Hkv, num_pages, ps, D] sharded on the page dim over
+    ``axis``; block_tables [B, T] global ids; kv_len [B] pre-append lengths.
+
+    Returns (o [B, Hq, D], new_k_pages, new_v_pages) — o replicated, pools
+    still sharded. Inside: per-shard local scatter + local partial attention,
+    merged with tiny all-reduces (module docstring).
+    """
+    from repro.distributed import shard_map
+    n_shards = pool_shard_count(mesh, axis)
+    ps = k_pages.shape[2]
+    n_local = pages_per_shard(k_pages.shape[1], n_shards)
+
+    def local(q_l, kn, vn, kp, vp, bt, kvl):
+        shard = jax.lax.axis_index(axis)
+        page = jnp.take_along_axis(bt, (kvl // ps)[:, None], axis=1)[:, 0]
+        dest = page * ps + kvl % ps                      # [B] global slots
+        kp = _scatter_local(kp, dest, kn.transpose(1, 0, 2), n_local * ps,
+                            shard)
+        vp = _scatter_local(vp, dest, vn.transpose(1, 0, 2), n_local * ps,
+                            shard)
+        bt_local, valid = _local_ids(bt, n_local, shard)
+        acc, m, l = spark_paged_decode_partials(
+            q_l, kp, vp, bt_local, kvl + 1, block_valid=valid, impl=impl,
+            window=window, scale=scale)
+        o = merge_partials(acc, m, l, axis, out_dtype=q_l.dtype)
+        return o, kp, vp
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(), P(), P(), P(None, axis), P(None, axis),
+                               P(), P()),
+                     out_specs=(P(), P(None, axis), P(None, axis)))(
+        q, k_new, v_new, k_pages, v_pages,
+        block_tables.astype(jnp.int32), kv_len.astype(jnp.int32))

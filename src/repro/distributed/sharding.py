@@ -5,12 +5,23 @@ Params and activations are annotated with *logical* axis names
 records every fallback it takes, so the dry-run can report exactly how each of
 the 10 heterogeneous archs was laid out on the same (pod, data, model) mesh.
 
-Key rules (see DESIGN.md §4):
+Key rules (see docs/architecture.md):
   batch        → (pod, data)  [DP]
   seq          → model        [Megatron-style sequence parallelism between
                                layers; attention/MLP gather internally]
   heads/mlp/vocab/experts/rnn → model  [TP/EP], iff divisible, else replicate
   embed (param dim) → data when cfg.fsdp  [FSDP/ZeRO; gathered per layer]
+
+The full ZeRO-3 profile (``_fsdp_rules``: no TP at all, params and batch
+jointly over (data, model)) replaces the rule set above only when the config
+*opts in* to parameter sharding with ``fsdp=True`` AND selects
+``sharding_profile="fsdp"``.  The profile string alone is an annotation of
+what the hillclimb found best at production scale; honoring it without the
+``fsdp`` opt-in silently FSDP-shards the embed/vocab axis where TP /
+replication is expected, which turns per-layer weight gathers into
+whole-table all-gathers (the seed-state bug behind the four
+``test_sharding_rules`` xfails and the sharded-vs-single-device drift in
+``test_distributed``).
 """
 
 from __future__ import annotations
@@ -90,13 +101,15 @@ def default_rules(mesh: Mesh, cfg, *, serve: bool = False,
     replication automatically, and the spec builder never assigns one mesh
     axis twice — so e.g. the KV cache shards over kv_heads when divisible and
     over cache sequence (distributed flash-decode) otherwise."""
-    dp: Any = tuple(a for a in ("pod", "data") if a in mesh.shape)
-    if len(dp) == 1:
+    dp: Any = tuple(a for a in ("pod", "data") if a in mesh.shape) or None
+    if dp is not None and len(dp) == 1:
         dp = dp[0]
     tp = "model" if "model" in mesh.shape else None
 
-    if (cfg is not None and not serve
-            and getattr(cfg, "sharding_profile", "tp_sp") == "fsdp"):
+    if not serve and uses_fsdp_profile(cfg):
+        # ZeRO-3 needs BOTH flags: the profile string alone is a scale
+        # annotation, not an opt-in (module docstring) — without cfg.fsdp the
+        # arch keeps the TP-SP rules below.
         return _fsdp_rules(mesh, cfg)  # train-only profile (see above)
 
     rules: Dict[str, Any] = {
@@ -122,13 +135,14 @@ def default_rules(mesh: Mesh, cfg, *, serve: bool = False,
         "kv_cache_seq": tp,   # long-KV decode: cache seq sharded when kv_heads
                               # can't be (spec builder enforces axis uniqueness)
     }
-    if cfg is not None and getattr(cfg, "fsdp", False) and not decode:
+    if (cfg is not None and getattr(cfg, "fsdp", False) and not decode
+            and "data" in mesh.shape):
         # FSDP: weights gathered per layer inside scan. Train + prefill only
         # (both have whole-sequence compute to overlap the gathers); per-token
         # weight all-gathers would dominate decode (qwen3 decode went
         # 6ms→146ms when FSDP leaked into decode rules — §Perf iteration 3).
         rules["embed"] = "data"
-    if decode and cfg is not None and cfg.num_kv_heads \
+    if decode and tp is not None and cfg is not None and cfg.num_kv_heads \
             and cfg.num_kv_heads % _axis_size(mesh, tp) != 0:
         # Distributed flash-decode: the cache is seq-sharded (kv_heads can't
         # shard). If q stayed heads-sharded, GSPMD must all-gather the WHOLE
@@ -154,7 +168,7 @@ def default_rules(mesh: Mesh, cfg, *, serve: bool = False,
                 # context parallelism: shard attention QUERY rows over the
                 # model axis instead — each shard computes all heads for its
                 # sequence slice (full KV), removing the tp_size× replication
-                # of attention compute (EXPERIMENTS.md §Perf iteration 4).
+                # of attention compute (perf hillclimb iteration 4).
                 rules["seq_full"] = tp
         if cfg.num_kv_heads % tp_size != 0:
             rules["kv_heads"] = None
@@ -168,9 +182,9 @@ def _fsdp_rules(mesh: Mesh, cfg) -> ShardingRules:
     axes (weights all-gathered per layer, grads reduce-scattered). Collective
     bytes scale with weight size instead of activation size — the right
     profile when TP-SP activation traffic dominates (small d_model, or
-    large-batch training of dense stacks; see EXPERIMENTS.md §Perf)."""
-    fs: Any = tuple(a for a in ("data", "model") if a in mesh.shape)
-    if len(fs) == 1:
+    large-batch training of dense stacks; see launch/hillclimb.py)."""
+    fs: Any = tuple(a for a in ("data", "model") if a in mesh.shape) or None
+    if fs is not None and len(fs) == 1:
         fs = fs[0]
     # pod stays pure gradient-replica DP so global_batch=256 still divides.
     rules: Dict[str, Any] = {
@@ -186,6 +200,18 @@ def _fsdp_rules(mesh: Mesh, cfg) -> ShardingRules:
         "kv_cache_seq": None,
     }
     return ShardingRules(mesh=mesh, rules=rules)
+
+
+def uses_fsdp_profile(cfg) -> bool:
+    """Does this config take the full ZeRO-3 profile from ``default_rules``?
+
+    Single source of the profile gate, shared with the dry-run / analytic
+    memory model so their layout assumptions match what actually compiles:
+    BOTH the ``sharding_profile="fsdp"`` annotation and the explicit
+    ``fsdp=True`` opt-in are required (module docstring)."""
+    return (cfg is not None
+            and getattr(cfg, "sharding_profile", "tp_sp") == "fsdp"
+            and getattr(cfg, "fsdp", False))
 
 
 def vocab_pad_for(mesh: Mesh) -> int:

@@ -40,6 +40,34 @@ from repro.core.online_softmax import NEG_INF
 LANES = 128
 
 
+def _online_block(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, kv_start,
+                  kv_len, q_pos, *, scale, window, acc_dtype):
+    """Fold one KV block into the (m, l, acc) scratch state (paper Eq. 2)."""
+    q = q_ref[0, 0]                            # [G, D]
+    k = k_ref[0, 0]                            # [bkv, D]
+    v = v_ref[0, 0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=acc_dtype)
+    s = s.astype(jnp.float32) * scale          # [G, bkv]
+    kp = kv_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    allowed = kp < kv_len
+    if window is not None:
+        allowed &= kp > q_pos - window
+    s = jnp.where(allowed, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]
+    l_prev = l_ref[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = jnp.broadcast_to((l_prev * alpha + jnp.sum(p, axis=1))[:, None],
+                                  l_ref.shape)
+    m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+    pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=acc_dtype)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + pv.astype(jnp.float32)
+
+
 def _decode_kernel(kv_len_ref,                    # scalar prefetch [B]
                    q_ref, k_ref, v_ref,           # inputs
                    o_ref,                         # output
@@ -64,29 +92,9 @@ def _decode_kernel(kv_len_ref,                    # scalar prefetch [B]
 
     @pl.when(needed)
     def _compute():
-        q = q_ref[0, 0]                            # [G, D]
-        k = k_ref[0, 0]                            # [bkv, D]
-        v = v_ref[0, 0]
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=acc_dtype)
-        s = s.astype(jnp.float32) * scale          # [G, bkv]
-        kp = kv_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        allowed = kp < kv_len
-        if window is not None:
-            allowed &= kp > q_pos - window
-        s = jnp.where(allowed, s, NEG_INF)
-
-        m_prev = m_ref[:, 0]
-        l_prev = l_ref[:, 0]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-        alpha = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new[:, None])
-        l_ref[...] = jnp.broadcast_to((l_prev * alpha + jnp.sum(p, axis=1))[:, None],
-                                      l_ref.shape)
-        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
-        pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-                                 preferred_element_type=acc_dtype)
-        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv.astype(jnp.float32)
+        _online_block(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, kv_start,
+                      kv_len, q_pos, scale=scale, window=window,
+                      acc_dtype=acc_dtype)
 
     @pl.when(ik == nk - 1)
     def _write():
@@ -101,6 +109,48 @@ def _paged_decode_kernel(kv_len_ref, bt_ref, *rest, **kw):
     # cache block, so the online-softmax loop is shared with _decode_kernel.
     del bt_ref
     _decode_kernel(kv_len_ref, *rest, **kw)
+
+
+def _paged_partial_kernel(kv_len_ref, bt_ref, valid_ref,  # scalar prefetch
+                          q_ref, k_ref, v_ref,            # inputs
+                          acc_out_ref, m_out_ref, l_out_ref,   # outputs
+                          acc_ref, m_ref, l_ref,          # scratch
+                          *, scale: float, window: Optional[int],
+                          block_kv: int, acc_dtype):
+    """Partial-state paged decode: like _paged_decode_kernel, but (a) blocks
+    whose ``valid_ref[b, ik] == 0`` are skipped entirely (the distributed path
+    marks non-local table entries invalid; they point at the local trash page)
+    and (b) the un-normalised (acc, m, l) state is written out instead of
+    ``acc / l`` — the caller merges states across shards (online_softmax.merge)
+    and finalizes once."""
+    del bt_ref
+    b, hk, ik = (pl.program_id(i) for i in range(3))
+    nk = pl.num_programs(2)
+    kv_start = ik * block_kv
+    kv_len = kv_len_ref[b]
+    q_pos = kv_len - 1
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    needed = (kv_start < kv_len) & (valid_ref[b, ik] != 0)
+    if window is not None:
+        needed &= kv_start + block_kv - 1 > q_pos - window
+
+    @pl.when(needed)
+    def _compute():
+        _online_block(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, kv_start,
+                      kv_len, q_pos, scale=scale, window=window,
+                      acc_dtype=acc_dtype)
+
+    @pl.when(ik == nk - 1)
+    def _write():
+        acc_out_ref[0, 0] = acc_ref[...].astype(acc_out_ref.dtype)
+        m_out_ref[0, 0] = m_ref[...].astype(m_out_ref.dtype)
+        l_out_ref[0, 0] = l_ref[...].astype(l_out_ref.dtype)
 
 
 def flash_paged_decode(q, k_pages, v_pages, block_tables, kv_len, *,
@@ -163,6 +213,79 @@ def flash_paged_decode(q, k_pages, v_pages, block_tables, kv_len, *,
     )(kv_len.astype(jnp.int32), block_tables.astype(jnp.int32), qg,
       k_pages, v_pages)
     return o[:, :, :group].reshape(b, hq, d)
+
+
+def flash_paged_decode_partials(q, k_pages, v_pages, block_tables, kv_len, *,
+                                block_valid=None, window: Optional[int] = None,
+                                scale: Optional[float] = None,
+                                acc_dtype=jnp.float32,
+                                interpret: bool = False):
+    """Paged flash-decode returning the un-finalized online-softmax state.
+
+    Same arguments as :func:`flash_paged_decode` plus ``block_valid [B, T]``
+    (int32/bool; 0 marks table entries this caller does not own — the
+    distributed path passes the locality mask of its pool shard and remaps
+    those entries to its local trash page).  Returns the f32 triple
+    ``(acc [B,Hq,D], m [B,Hq], l [B,Hq])`` for ``online_softmax.merge`` /
+    ``finalize`` — shards of a page-sharded pool each compute their local
+    state, then a tiny all-reduce merges them (distributed paged serving).
+    """
+    b, hq, d = q.shape
+    hkv, _, page_size, _ = k_pages.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    t = block_tables.shape[1]
+    if block_valid is None:
+        block_valid = jnp.ones((b, t), jnp.int32)
+
+    qg = q.reshape(b, hkv, group, d)
+    g_pad = max(8, group)
+    if g_pad != group:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad - group), (0, 0)))
+
+    kernel = functools.partial(_paged_partial_kernel, scale=scale,
+                               window=window, block_kv=page_size,
+                               acc_dtype=acc_dtype)
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    out_spec = pl.BlockSpec((1, 1, g_pad, d),
+                            lambda b_, h, ik, kvl, bt, bv: (b_, h, 0, 0))
+    stat_spec = pl.BlockSpec((1, 1, g_pad, LANES),
+                             lambda b_, h, ik, kvl, bt, bv: (b_, h, 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hkv, t),
+        in_specs=[
+            pl.BlockSpec((1, 1, g_pad, d),
+                         lambda b_, h, ik, kvl, bt, bv: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, d),
+                         lambda b_, h, ik, kvl, bt, bv: (h, bt[b_, ik], 0, 0)),
+            pl.BlockSpec((1, 1, page_size, d),
+                         lambda b_, h, ik, kvl, bt, bv: (h, bt[b_, ik], 0, 0)),
+        ],
+        out_specs=[out_spec, stat_spec, stat_spec],
+        scratch_shapes=[pltpu.VMEM((g_pad, d), jnp.float32),
+                        pltpu.VMEM((g_pad, LANES), jnp.float32),
+                        pltpu.VMEM((g_pad, LANES), jnp.float32)],
+    )
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, hkv, g_pad, d), jnp.float32),
+                   jax.ShapeDtypeStruct((b, hkv, g_pad, LANES), jnp.float32),
+                   jax.ShapeDtypeStruct((b, hkv, g_pad, LANES), jnp.float32)],
+        interpret=interpret,
+        **kwargs,
+    )(kv_len.astype(jnp.int32), block_tables.astype(jnp.int32),
+      block_valid.astype(jnp.int32), qg, k_pages, v_pages)
+    acc = acc[:, :, :group].reshape(b, hq, d)
+    m = m[:, :, :group, 0].reshape(b, hq)
+    l = l[:, :, :group, 0].reshape(b, hq)
+    return acc, m, l
 
 
 def flash_decode(q, k, v, *, kv_len=None, window: Optional[int] = None,

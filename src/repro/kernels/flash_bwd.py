@@ -3,7 +3,7 @@
 The paper implements the backward as ONE kernel: each thread block owns a KV
 block, iterates over Q blocks, accumulates dK/dV locally and scatters dQ with
 HBM **atomic adds**.  TPUs have no HBM atomics; the TPU-idiomatic equivalent
-(documented in DESIGN.md §2) is a **dual-pass** design where each pass owns the
+(see docs/architecture.md) is a **dual-pass** design where each pass owns the
 tensor it accumulates, and the accumulation happens race-free in VMEM scratch
 across a *sequential* ("arbitrary") grid dimension:
 

@@ -21,7 +21,8 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_bwd import flash_bwd
 from repro.kernels.flash_fwd import flash_fwd
-from repro.kernels.decode import flash_decode, flash_paged_decode
+from repro.kernels.decode import (flash_decode, flash_paged_decode,
+                                  flash_paged_decode_partials)
 from repro.kernels import ref
 
 
@@ -128,6 +129,22 @@ def paged_decode(q, k_pages, v_pages, block_tables, kv_len, *, window=None,
     """
     return flash_paged_decode(q, k_pages, v_pages, block_tables, kv_len,
                               window=window, scale=scale, interpret=interpret)
+
+
+def paged_decode_partials(q, k_pages, v_pages, block_tables, kv_len, *,
+                          block_valid=None, window=None, scale=None,
+                          interpret: bool = False):
+    """Paged flash-decode stopping at the (acc, m, l) online-softmax state.
+
+    ``block_valid [B, T]`` (0/1) gates table entries — a shard of a
+    page-sharded pool passes its locality mask so non-local entries (remapped
+    to the local trash page) are skipped. States from different shards merge
+    with ``online_softmax.merge`` and finalize once (distributed serving).
+    """
+    return flash_paged_decode_partials(q, k_pages, v_pages, block_tables,
+                                       kv_len, block_valid=block_valid,
+                                       window=window, scale=scale,
+                                       interpret=interpret)
 
 
 def gather_pages(pages, block_tables):

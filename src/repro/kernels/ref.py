@@ -358,8 +358,7 @@ def online_mha(q, k, v, *, causal: bool = False, window: Optional[int] = None,
     (m, l, acc); the custom-vjp backward recomputes S/P per chunk from the
     stored LSE exactly like kernels/flash_bwd.py — without it, differentiating
     through the scan would save the full f32 acc carry per chunk (≈5 GB/layer
-    at 32k/40-head scales; found via the dry-run memory pass, EXPERIMENTS.md
-    §Perf). GQA folds the q-head group into rows instead of expanding K/V.
+    at 32k/40-head scales; found via the dry-run memory pass). GQA folds the q-head group into rows instead of expanding K/V.
     segment_ids [B, Skv] masks cross-segment pairs (packed/varlen batches).
     """
     b, hq, sq, d = q.shape

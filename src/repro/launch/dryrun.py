@@ -26,6 +26,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
 from repro.configs import SHAPES, cells, get_config
+from repro.distributed.sharding import uses_fsdp_profile
 from repro.launch.mesh import make_production_mesh
 from repro.models import lm
 from repro.perf import collective_stats, roofline
@@ -150,7 +151,7 @@ def lower_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
     hlo = compiled.as_text()
     coll = collective_stats(hlo, default_group=chips)
     step_kind = shape.kind
-    if cfg.sharding_profile == "fsdp":
+    if uses_fsdp_profile(cfg):
         # no TP: tokens shard over (data x model); params ZeRO-3 over both
         dp_sh = mesh.shape.get("data", 1) * mesh.shape.get("model", 1)
         tp_sh = 1
@@ -240,7 +241,7 @@ def _delta_cost(arch_name, shape_name, *, multi_pod, xla_chunk,
         for k in set(m1["collectives"]["bytes_by_kind"])
         | set(m2["collectives"]["bytes_by_kind"])}
     mesh = make_production_mesh(multi_pod=multi_pod)
-    if cfg.sharding_profile == "fsdp":
+    if uses_fsdp_profile(cfg):
         # no TP: tokens shard over (data x model); params ZeRO-3 over both
         dp_sh = mesh.shape.get("data", 1) * mesh.shape.get("model", 1)
         tp_sh = 1

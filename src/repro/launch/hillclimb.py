@@ -1,7 +1,7 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-"""Perf hillclimb driver (§Perf of EXPERIMENTS.md).
+"""Perf hillclimb driver (the recorded perf-iteration log; see docs/architecture.md).
 
 Runs the selected hillclimb cells with one optimization applied at a time,
 writes tagged artifacts next to the baselines, and prints before→after deltas
@@ -22,7 +22,7 @@ from repro.launch.dryrun import ART_DIR, run_cell
 
 # (arch, shape, tag, cfg-field overrides, step options)
 # Round 1 (fsdp_profile / onehot_write / ctx_parallel / fsdp_micro4) ran
-# against v1; results in EXPERIMENTS.md §Perf. Round 2 below applies the
+# against v1 (deltas inline below). Round 2 below applies the
 # diagnoses from round 1.
 EXPERIMENTS = [
     # ---- cell B round 2: decode q-activation replication ----
@@ -50,7 +50,7 @@ EXPERIMENTS = [
     # ---- cell A round 2: fsdp profile + chunked-mamba-style CE? none —
     # cell A keeps fsdp_profile (2.86×, confirmed). Remaining gap is the 3rd
     # weight gather from full remat; measured-not-fixed (saving gathered
-    # weights needs 131 GB). Recorded in EXPERIMENTS.md.
+    # weights needs 131 GB).
 ]
 
 # Round 3: remaining collective-bound small-dense train cells. Same napkin
@@ -58,12 +58,14 @@ EXPERIMENTS = [
 # per-device compute under TP-SP; ZeRO-3 comm is weight-bound and tiny for a
 # 1-3B model (granite: 3×40×135 MB ≈ 16 GB → ~0.33 s vs 3.0 s observed).
 ROUND3 = [
+    # the ZeRO-3 profile gate needs the explicit fsdp=True opt-in alongside
+    # the profile string (distributed/sharding.py) — the override sets both
     ("granite_3_2b", "train_4k", "fsdp_profile",
-     dict(sharding_profile="fsdp"), {}),
+     dict(sharding_profile="fsdp", fsdp=True), {}),
     ("hubert_xlarge", "train_4k", "fsdp_profile",
-     dict(sharding_profile="fsdp"), {}),
+     dict(sharding_profile="fsdp", fsdp=True), {}),
     ("recurrentgemma_2b", "train_4k", "fsdp_profile",
-     dict(sharding_profile="fsdp"), {}),
+     dict(sharding_profile="fsdp", fsdp=True), {}),
 ]
 
 

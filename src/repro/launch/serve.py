@@ -7,6 +7,11 @@ CPU-runnable smoke examples:
 Paged continuous batching (block-table cache, ragged synthetic requests):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_14b --smoke \\
       --paged --requests 8 --page-size 16 --gen 32
+
+Distributed paged serving (page pool sharded over the mesh's model axis;
+needs that many devices, e.g. XLA_FLAGS=--xla_force_host_platform_device_count=2):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3_14b --smoke \\
+      --paged --mesh 2 --requests 8 --gen 32
 """
 
 from __future__ import annotations
@@ -53,9 +58,7 @@ def main(argv=None):
     mesh = parse_mesh(args.mesh)
 
     if args.paged:
-        if mesh is not None:
-            raise SystemExit("--paged is single-host for now (ROADMAP)")
-        return serve_paged(cfg, args)
+        return serve_paged(cfg, args, mesh)
 
     max_len = args.prompt_len + args.gen
     arts = make_serve_steps(cfg, mesh=mesh, impl=args.impl, max_len=max_len,
@@ -90,24 +93,29 @@ def main(argv=None):
     print("generated (first row):", gen[0][:16])
 
 
-def serve_paged(cfg, args):
+def serve_paged(cfg, args, mesh=None):
     """Continuous batching over ragged synthetic requests (paged KV cache)."""
     from repro.serving import PagedCacheConfig, ServingEngine
 
     from repro.models import lm
     key = jax.random.PRNGKey(args.seed)
-    params, _ = lm.init_params(cfg, key)
+    n_shards = int(mesh.shape.get("model", 1)) if mesh is not None else 1
+    params, _ = lm.init_params(cfg, key, vocab_pad_to=n_shards)
     rs = np.random.RandomState(args.seed)
     budget = args.prompt_len + args.gen
+    # pool sized so roughly half the requests fit at once — the scheduler
+    # has to actually evict/admit, which is the scenario being demoed —
+    # then padded so the page-aligned shard split divides evenly
+    num_pages = n_shards + max(2, args.requests // 2) * (
+        -(-budget // args.page_size) + 1)
+    num_pages = -(-num_pages // n_shards) * n_shards
     pcfg = PagedCacheConfig(
         page_size=args.page_size,
         max_batch=args.max_batch,
         max_pages_per_seq=-(-budget // args.page_size) + 1,
-        # pool sized so roughly half the requests fit at once — the scheduler
-        # has to actually evict/admit, which is the scenario being demoed
-        num_pages=1 + max(2, args.requests // 2) * (
-            -(-budget // args.page_size) + 1))
-    eng = ServingEngine(cfg, pcfg, params, impl=args.impl,
+        num_pages=num_pages,
+        num_shards=n_shards)
+    eng = ServingEngine(cfg, pcfg, params, impl=args.impl, mesh=mesh,
                         prefill_len=max(args.prompt_len, args.page_size))
     reqs = []
     for _ in range(args.requests):  # ragged: 25%..100% of the nominal lengths

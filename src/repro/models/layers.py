@@ -36,6 +36,10 @@ class Ctx:
     block_kv: int = 128
     acc_dtype: Any = jnp.float32
     bwd_acc_dtype: Any = jnp.float32
+    mesh: Any = None                 # set by the paged serving steps when the
+                                     # page pool is sharded: attention routes
+                                     # its pool scatter/decode through the
+                                     # shard_map paths in distributed/paged.py
 
     def c(self, x, *axes):
         """Apply an activation sharding constraint if a mesh is attached."""
@@ -201,18 +205,30 @@ def apply_attention(p, x, ctx: Ctx, cfg, *, positions=None, cache=None,
             # logits are garbage by construction and ignored by the engine.
             assert paged is not None, "paged cache needs block_tables/kv_len"
             bt, kvl = paged["block_tables"], paged["kv_len"]
-            ps = cache["k_pages"].shape[2]
-            page = jnp.take_along_axis(bt, (kvl // ps)[:, None], axis=1)[:, 0]
-            dest = page * ps + kvl % ps                       # [B] token slots
-            ck = _scatter_pages(cache["k_pages"], dest,
-                                k[:, :, 0, :].transpose(1, 0, 2))
-            cv = _scatter_pages(cache["v_pages"], dest,
-                                v[:, :, 0, :].transpose(1, 0, 2))
-            # no ring buffer here — sliding windows mask inside the kernel
-            # (out-of-window pages could be freed early; ROADMAP follow-up)
-            o = spark_paged_decode(q[:, :, 0, :], ck, cv, bt, kvl + 1,
-                                   impl=ctx.impl,
-                                   window=cfg.attn_window)[:, :, None, :]
+            if ctx.mesh is not None:
+                # distributed pool (page dim sharded over the model axis):
+                # per-shard local scatter + local attention, merged with the
+                # online-softmax partial merge — see distributed/paged.py
+                from repro.distributed.paged import paged_append_decode_sharded
+                o, ck, cv = paged_append_decode_sharded(
+                    q[:, :, 0, :], k[:, :, 0, :], v[:, :, 0, :],
+                    cache["k_pages"], cache["v_pages"], bt, kvl,
+                    mesh=ctx.mesh, impl=ctx.impl, window=cfg.attn_window)
+                o = o[:, :, None, :]
+            else:
+                ps = cache["k_pages"].shape[2]
+                page = jnp.take_along_axis(bt, (kvl // ps)[:, None],
+                                           axis=1)[:, 0]
+                dest = page * ps + kvl % ps                   # [B] token slots
+                ck = _scatter_pages(cache["k_pages"], dest,
+                                    k[:, :, 0, :].transpose(1, 0, 2))
+                cv = _scatter_pages(cache["v_pages"], dest,
+                                    v[:, :, 0, :].transpose(1, 0, 2))
+                # no ring buffer here — sliding windows mask inside the kernel
+                # (out-of-window pages could be freed early; ROADMAP follow-up)
+                o = spark_paged_decode(q[:, :, 0, :], ck, cv, bt, kvl + 1,
+                                       impl=ctx.impl,
+                                       window=cfg.attn_window)[:, :, None, :]
             new_cache = {"k_pages": ck, "v_pages": cv}
             o = ctx.c(o, "batch", "heads", "seq_full", "head_dim")
             out = o.transpose(0, 2, 1, 3).reshape(b, s, hq * hd) @ p["wo"]
@@ -252,10 +268,19 @@ def apply_attention(p, x, ctx: Ctx, cfg, *, positions=None, cache=None,
             assert paged is not None and "dest" in paged, \
                 "packed prefill onto a paged cache needs dest token slots"
             dest = paged["dest"].reshape(-1)                  # [B*S]
-            ck = _scatter_pages(cache["k_pages"], dest,
-                                k.transpose(1, 0, 2, 3).reshape(hkv, b * s, hd))
-            cv = _scatter_pages(cache["v_pages"], dest,
-                                v.transpose(1, 0, 2, 3).reshape(hkv, b * s, hd))
+            kv_vals = (k.transpose(1, 0, 2, 3).reshape(hkv, b * s, hd),
+                       v.transpose(1, 0, 2, 3).reshape(hkv, b * s, hd))
+            if ctx.mesh is not None:
+                # sharded pool: each shard keeps the writes that land in its
+                # pages; foreign tokens hit its local trash page
+                from repro.distributed.paged import scatter_pages_sharded
+                ck = scatter_pages_sharded(cache["k_pages"], dest, kv_vals[0],
+                                           mesh=ctx.mesh)
+                cv = scatter_pages_sharded(cache["v_pages"], dest, kv_vals[1],
+                                           mesh=ctx.mesh)
+            else:
+                ck = _scatter_pages(cache["k_pages"], dest, kv_vals[0])
+                cv = _scatter_pages(cache["v_pages"], dest, kv_vals[1])
             new_cache = {"k_pages": ck, "v_pages": cv}
         elif cache is not None:  # contiguous prefill (position 0): fill it
             # this cache stores no segment structure, so a packed prefill

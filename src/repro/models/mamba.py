@@ -1,6 +1,6 @@
 """Mamba-1 selective-state-space mixer (falcon-mamba-7b, arXiv:2410.05355).
 
-Attention-free: SparkAttention is inapplicable (DESIGN.md §Arch-applicability);
+Attention-free: SparkAttention is inapplicable (no QKᵀ/softmax to fuse);
 the arch is supported by the framework with this pure-JAX mixer. The selective
 scan h_t = Ā_t ⊙ h_{t-1} + B̄_t x_t is linear in h → associative scan over the
 sequence for train/prefill, single-step update for decode.

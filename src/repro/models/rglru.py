@@ -2,7 +2,7 @@
 
 The recurrence  h_t = a_t ⊙ h_{t-1} + √(1-a_t²) ⊙ (i_t ⊙ x_t)  is a linear
 (elementwise, gated) scan — SparkAttention is inapplicable here (no QKᵀ /
-softmax), so this mixer is pure JAX (DESIGN.md §Arch-applicability). Training
+softmax), so this mixer is pure JAX (docs/architecture.md). Training
 uses an associative scan over the sequence; decode is a single state update.
 
 Block layout (Griffin recurrent block):

@@ -202,7 +202,8 @@ def storage_for(cfg, shape, *, dp: int, tp: int, fsdp: bool) -> dict:
         out["grads"] = params_store / BF16 * F32
         # saved residuals at superblock boundaries (seq additionally sharded
         # by TP under the SP layout)
-        seq_shard = tp if (cfg.sharding_profile == "tp_sp"
+        from repro.distributed.sharding import uses_fsdp_profile
+        seq_shard = tp if (not uses_fsdp_profile(cfg)
                            and shape.seq_len % max(tp, 1) == 0) else 1
         out["residuals"] = (cfg.num_layers * tokens_local * cfg.d_model
                             * BF16 / seq_shard)

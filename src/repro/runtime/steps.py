@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.distributed.sharding import ShardingRules, default_rules
+from repro.distributed.sharding import (ShardingRules, default_rules,
+                                        vocab_pad_for)
 from repro.models import lm
 from repro.models.layers import Ctx
 from repro.optim import AdamWConfig, adamw_init, adamw_update
@@ -29,11 +30,11 @@ from repro.optim.schedule import cosine_schedule
 def _make_ctx(cfg, rules: Optional[ShardingRules], impl: str, seed,
               deterministic: bool, decode: bool = False,
               xla_chunk: int = 1024, xla_unroll: bool = False,
-              decode_write: str = "dus") -> Ctx:
+              decode_write: str = "dus", mesh=None) -> Ctx:
     return Ctx(constrain=rules.constrain if rules is not None else None,
                impl=impl, deterministic=deterministic, seed=seed,
                decode=decode, xla_chunk=xla_chunk, xla_unroll=xla_unroll,
-               decode_write=decode_write)
+               decode_write=decode_write, mesh=mesh)
 
 
 @dataclasses.dataclass
@@ -51,7 +52,7 @@ def make_train_step(cfg, *, mesh=None, opt: AdamWConfig = AdamWConfig(),
                     xla_unroll: bool = False,
                     donate: bool = True) -> TrainArtifacts:
     rules = default_rules(mesh, cfg) if mesh is not None else None
-    vocab_pad = mesh.shape.get("model", 1) if mesh is not None else 1
+    vocab_pad = vocab_pad_for(mesh) if mesh is not None else 1
 
     def init_fn(key):
         params, specs = lm.init_params(cfg, key, vocab_pad_to=vocab_pad)
@@ -157,22 +158,43 @@ def make_serve_steps(cfg, *, mesh=None, impl: str = "xla", max_len: int = 2048,
           → (logits [B,Vpad], caches)       # B = paged.max_batch slots
     """
     if paged is not None:
-        # single-host for now: block tables index a global page pool, which
-        # would need page-aligned sharding rules to distribute (ROADMAP)
-        assert mesh is None, "paged serving is single-host for now"
+        # distributed pool: the page dim shards over the mesh's model axis
+        # (page-aligned — pages never straddle shards); decode runs per-shard
+        # local attention + online-softmax partial merge via the shard_map
+        # paths in distributed/paged.py. mesh=None keeps the single-host path.
+        rules = rules_dec = None
+        if mesh is not None:
+            from repro.distributed.paged import pool_shard_count
+            n_shards = pool_shard_count(mesh)
+            if paged.num_shards != n_shards:
+                raise ValueError(
+                    f"PagedCacheConfig.num_shards={paged.num_shards} must "
+                    f"equal the mesh's model-axis size {n_shards} (the "
+                    f"allocator reserves one trash page per pool shard)")
+            # the page-aligned split itself is validated by PagedCacheConfig
+            rules = default_rules(mesh, cfg, serve=True)
+            rules_dec = default_rules(mesh, cfg, serve=True, decode=True)
 
         def cache_init():
-            return lm.init_paged_cache(cfg, paged)
+            caches = lm.init_paged_cache(cfg, paged)
+            if mesh is not None:
+                # leaf [(n_super,) Hkv, num_pages, page_size, D]: the page
+                # axis is always ndim-3
+                caches = jax.device_put(caches, jax.tree.map(
+                    lambda x: NamedSharding(
+                        mesh, P(*(None,) * (x.ndim - 3), "model", None, None)),
+                    caches))
+            return caches
 
         def prefill_fn(params, tokens, segment_ids, positions, dest, caches):
-            ctx = _make_ctx(cfg, None, impl, 0, True, xla_chunk=xla_chunk,
-                            xla_unroll=xla_unroll)
+            ctx = _make_ctx(cfg, rules, impl, 0, True, xla_chunk=xla_chunk,
+                            xla_unroll=xla_unroll, mesh=mesh)
             return lm.paged_prefill(cfg, params, ctx, tokens, segment_ids,
                                     positions, dest, caches)
 
         def decode_fn(params, token, caches, block_tables, kv_len):
-            ctx = _make_ctx(cfg, None, impl, 0, True, xla_chunk=xla_chunk,
-                            decode_write=decode_write)
+            ctx = _make_ctx(cfg, rules_dec, impl, 0, True, xla_chunk=xla_chunk,
+                            decode_write=decode_write, mesh=mesh)
             return lm.paged_decode_step(cfg, params, ctx, token, caches,
                                         block_tables, kv_len)
 
@@ -181,7 +203,8 @@ def make_serve_steps(cfg, *, mesh=None, impl: str = "xla", max_len: int = 2048,
         return ServeArtifacts(prefill_fn=jax.jit(prefill_fn,
                                                  donate_argnums=(5,)),
                               decode_fn=jax.jit(decode_fn, donate_argnums=(2,)),
-                              cache_init_fn=cache_init, rules=None)
+                              cache_init_fn=cache_init, rules=rules,
+                              rules_decode=rules_dec)
 
     # prefill and decode get DIFFERENT activation rules: prefill behaves
     # like a forward train pass (FSDP weight gathers amortise over the whole
@@ -189,7 +212,7 @@ def make_serve_steps(cfg, *, mesh=None, impl: str = "xla", max_len: int = 2048,
     rules = default_rules(mesh, cfg, serve=True) if mesh is not None else None
     rules_dec = (default_rules(mesh, cfg, serve=True, decode=True)
                  if mesh is not None else None)
-    vocab_pad = mesh.shape.get("model", 1) if mesh is not None else 1
+    vocab_pad = vocab_pad_for(mesh) if mesh is not None else 1
 
     def cache_init():
         return lm.init_cache(cfg, batch, max_len)

@@ -16,6 +16,8 @@ idea, built on this repo's scalar-prefetch ragged-skip machinery):
 Kernel-level entry points live in ``core.attention.spark_paged_decode`` and
 ``kernels/decode.py::flash_paged_decode``; jitted model steps come from
 ``runtime.steps.make_serve_steps(..., paged=PagedCacheConfig(...))``.
+Distributed serving (page-aligned pool sharding + partial-merge decode)
+lives in ``distributed/paged.py`` — pass ``mesh=`` to the engine/steps.
 See docs/serving.md for the design and a quickstart.
 """
 

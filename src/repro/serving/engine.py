@@ -3,13 +3,20 @@
 Ties the pieces together: the scheduler admits/evicts between decode steps,
 admissions are packed into fused prefill rows (segment-aware: one forward
 fills every admitted prompt's pages), and the decode step runs all active
-slots against the page pool via block tables.  Greedy sampling; requests
-finish after ``max_new_tokens`` (EOS handling is a one-line host-side check a
-user can add — kept out to keep generations deterministic for the tests).
+slots against the page pool via block tables.  Greedy sampling; a request
+finishes when it emits its ``eos_id`` (set per request or engine-wide) or
+exhausts ``max_new_tokens`` — EOS eviction frees the slot and pages
+immediately instead of decoding dead tokens to the budget.
 
 The jitted steps see fixed shapes only — [B=max_batch] decode rows, packed
 prefill rows of ``prefill_len`` — so the whole ragged, churning workload runs
 on exactly two compilations.
+
+Distributed serving: pass ``mesh=`` (with ``PagedCacheConfig.num_shards`` =
+the mesh's model-axis size) and the page pools shard page-aligned over the
+mesh while decode runs per-shard local attention + online-softmax partial
+merge (distributed/paged.py). The host-side scheduler/allocator logic is
+byte-identical in both modes — block tables keep global page ids.
 """
 
 from __future__ import annotations
@@ -17,6 +24,7 @@ from __future__ import annotations
 import time
 from typing import Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -28,14 +36,24 @@ from repro.serving.scheduler import ActiveSeq, Request, Scheduler
 class ServingEngine:
     def __init__(self, cfg, paged_cfg: PagedCacheConfig, params, *,
                  impl: str = "xla", prefill_len: Optional[int] = None,
-                 xla_chunk: int = 1024):
+                 xla_chunk: int = 1024, mesh=None,
+                 eos_id: Optional[int] = None):
         assert cfg.causal, "serving needs an autoregressive arch"
         self.cfg = cfg
         self.pcfg = paged_cfg
-        self.params = params
         self.prefill_len = prefill_len or paged_cfg.max_seq_len
-        arts = make_serve_steps(cfg, impl=impl, paged=paged_cfg,
+        self.eos_id = eos_id                     # default for submissions
+        arts = make_serve_steps(cfg, mesh=mesh, impl=impl, paged=paged_cfg,
                                 xla_chunk=min(xla_chunk, self.prefill_len))
+        if mesh is not None and arts.rules is not None:
+            # lay the params out per the serve rules (specs are structural —
+            # non-divisible dims such as an unpadded vocab fall back to
+            # replication automatically)
+            from repro.models import lm
+            _, specs = lm.abstract_params(cfg, vocab_pad_to=1)
+            params = jax.device_put(params,
+                                    arts.rules.tree_shardings(params, specs))
+        self.params = params
         self.prefill_fn = arts.prefill_fn
         self.decode_fn = arts.decode_fn
         self.caches = arts.cache_init_fn()
@@ -44,20 +62,22 @@ class ServingEngine:
         self._next_rid = 0
 
     # -- request intake ----------------------------------------------------
-    def submit(self, tokens, max_new_tokens: int, rid: Optional[int] = None):
+    def submit(self, tokens, max_new_tokens: int, rid: Optional[int] = None,
+               eos_id: Optional[int] = None):
         tokens = np.asarray(tokens, np.int32)
         if rid is None:
             rid = self._next_rid
         self._next_rid = max(self._next_rid, rid + 1)
-        req = Request(rid=rid, tokens=tokens, max_new_tokens=max_new_tokens)
+        req = Request(rid=rid, tokens=tokens, max_new_tokens=max_new_tokens,
+                      eos_id=self.eos_id if eos_id is None else eos_id)
         if req.prompt_len < 1:
             raise ValueError(f"request {rid}: empty prompt")
         if req.prompt_len > self.prefill_len:
             raise ValueError(f"prompt of {req.prompt_len} tokens exceeds "
                              f"prefill_len={self.prefill_len}")
-        if self.pcfg.pages_for(req.budget_tokens) > self.pcfg.num_pages - 1:
+        if self.pcfg.pages_for(req.budget_tokens) > self.pcfg.usable_pages:
             raise ValueError(f"request {rid} needs more pages than the pool "
-                             f"holds ({self.pcfg.num_pages - 1} usable)")
+                             f"holds ({self.pcfg.usable_pages} usable)")
         self.scheduler.submit(req)
         return rid
 

@@ -29,28 +29,67 @@ import numpy as np
 TRASH_PAGE = 0  # page 0 absorbs padding writes and backs unassigned entries
 
 
+def trash_pages_for(num_pages: int, num_shards: int) -> frozenset:
+    """Global ids of the per-shard trash pages (page 0 of every shard) —
+    the single source for the config's and the allocator's reserved set."""
+    per = num_pages // num_shards
+    return frozenset(s * per for s in range(num_shards))
+
+
 @dataclasses.dataclass(frozen=True)
 class PagedCacheConfig:
     """Static geometry of the paged cache (hashable → usable inside jit)."""
     page_size: int = 16          # tokens per KV page
-    num_pages: int = 64          # physical pages per layer, incl. trash page 0
+    num_pages: int = 64          # physical pages per layer, incl. trash page(s)
     max_batch: int = 4           # concurrent decode slots
     max_pages_per_seq: int = 16  # block-table width T
+    num_shards: int = 1          # page-pool shards (mesh "model" axis size);
+                                 # shard s owns pages [s·P, (s+1)·P) and its
+                                 # local page 0 (global s·P) is a trash page
+
+    def __post_init__(self):
+        if self.num_pages % self.num_shards != 0:
+            raise ValueError(
+                f"num_pages={self.num_pages} must divide by "
+                f"num_shards={self.num_shards}: pool sharding is page-aligned "
+                f"(pages never straddle shards)")
+        if self.num_pages // self.num_shards < 2:
+            raise ValueError("each pool shard needs its trash page plus at "
+                             "least one usable page")
 
     @property
     def max_seq_len(self) -> int:
         return self.max_pages_per_seq * self.page_size
+
+    @property
+    def trash_pages(self) -> frozenset:
+        """Global ids of the per-shard trash pages (page 0 of every shard)."""
+        return trash_pages_for(self.num_pages, self.num_shards)
+
+    @property
+    def usable_pages(self) -> int:
+        return self.num_pages - self.num_shards
 
     def pages_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
 
 
 class PageAllocator:
-    """Free-list allocator over physical page ids 1..num_pages-1."""
+    """Free-list allocator over the non-trash physical page ids.
 
-    def __init__(self, num_pages: int):
+    Single shard: pages ``1..num_pages-1`` (page 0 is the trash page).
+    ``num_shards > 1`` (distributed pool): the first page of every shard —
+    global ids ``s · num_pages/num_shards`` — is reserved as that shard's
+    trash page (non-local table entries and writes are remapped there), so
+    none of them is ever handed out.
+    """
+
+    def __init__(self, num_pages: int, num_shards: int = 1):
         assert num_pages >= 2, "need at least the trash page + one real page"
-        self._free: List[int] = list(range(num_pages - 1, 0, -1))  # pop() → 1 first
+        assert num_pages % num_shards == 0, "pool sharding is page-aligned"
+        self._trash = trash_pages_for(num_pages, num_shards)
+        self._free: List[int] = [p for p in range(num_pages - 1, 0, -1)
+                                 if p not in self._trash]  # pop() → lowest id
         self.num_pages = num_pages
 
     @property
@@ -65,7 +104,7 @@ class PageAllocator:
 
     def free(self, pages: List[int]):
         for p in pages:
-            assert p != TRASH_PAGE, "the trash page is never allocated"
+            assert p not in self._trash, "trash pages are never allocated"
         self._free.extend(pages)
 
 
@@ -74,7 +113,7 @@ class BlockTables:
 
     def __init__(self, cfg: PagedCacheConfig):
         self.cfg = cfg
-        self.allocator = PageAllocator(cfg.num_pages)
+        self.allocator = PageAllocator(cfg.num_pages, cfg.num_shards)
         self.tables = np.full((cfg.max_batch, cfg.max_pages_per_seq),
                               TRASH_PAGE, np.int32)
         self.kv_len = np.zeros((cfg.max_batch,), np.int32)
@@ -136,7 +175,7 @@ class BlockTables:
             "used_tokens": float(used),
             "allocated_tokens": float(cap),
             "allocated_pages": float(allocated),
-            "pool_pages": float(self.cfg.num_pages - 1),
+            "pool_pages": float(self.cfg.usable_pages),
             "utilization": used / cap if cap else 0.0,
-            "pool_fraction": allocated / (self.cfg.num_pages - 1),
+            "pool_fraction": allocated / self.cfg.usable_pages,
         }

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Deque, Dict, List
+from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
@@ -29,6 +29,8 @@ class Request:
     rid: int
     tokens: np.ndarray            # [prompt_len] int32
     max_new_tokens: int
+    eos_id: Optional[int] = None  # finish early when this token is emitted
+                                  # (None: run to the max_new_tokens budget)
 
     @property
     def prompt_len(self) -> int:
@@ -50,7 +52,13 @@ class ActiveSeq:
 
     @property
     def done(self) -> bool:
-        return len(self.generated) >= self.request.max_new_tokens
+        """Budget exhausted, or EOS emitted (freeing the slot and its pages
+        immediately instead of decoding dead tokens to the budget)."""
+        if len(self.generated) >= self.request.max_new_tokens:
+            return True
+        eos = self.request.eos_id
+        return (eos is not None and bool(self.generated)
+                and self.generated[-1] == eos)
 
 
 class Scheduler:

@@ -120,6 +120,7 @@ def test_int8_error_feedback_allreduce():
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.launch.mesh import make_mesh
+from repro.distributed import shard_map
 from repro.distributed.compression import quantize_psum, init_error_buffers
 
 mesh = make_mesh((8,), ("data",))
@@ -128,9 +129,9 @@ g = jax.random.normal(jax.random.PRNGKey(0), (8, 64, 64)) * 0.01
 def step(g_sharded, err):
     return quantize_psum(g_sharded, "data", err)
 
-f = jax.jit(jax.shard_map(step, mesh=mesh,
-                          in_specs=(P("data"), P("data")),
-                          out_specs=(P("data"), P("data"))))
+f = jax.jit(shard_map(step, mesh=mesh,
+                      in_specs=(P("data"), P("data")),
+                      out_specs=(P("data"), P("data"))))
 exact = jnp.mean(g, axis=0)
 err = jnp.zeros_like(g)
 acc = jnp.zeros_like(exact)
@@ -155,6 +156,7 @@ def test_pallas_kernel_under_shard_map():
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.launch.mesh import make_mesh
+from repro.distributed import shard_map
 from repro.kernels.ops import mha, AttnConfig
 from repro.kernels.ref import naive_mha
 
@@ -168,10 +170,11 @@ cfg = AttnConfig(causal=True, block_q=64, block_kv=64, interpret=True)
 def local_attn(q, k, v):
     return mha(q, k, v, seed=0, config=cfg)
 
-# check_vma=False: pallas_call out_shapes carry no varying-mesh-axes info
-f = jax.jit(jax.shard_map(local_attn, mesh=mesh,
-                          in_specs=(P("data", "model"),) * 3,
-                          out_specs=P("data", "model"), check_vma=False))
+# the repro.distributed shard_map shim keeps replication checks off:
+# pallas_call out_shapes carry no varying-mesh-axes info
+f = jax.jit(shard_map(local_attn, mesh=mesh,
+                      in_specs=(P("data", "model"),) * 3,
+                      out_specs=P("data", "model")))
 o = f(q, k, v)
 o_ref = naive_mha(q, k, v, causal=True)
 err = float(np.abs(np.asarray(o) - np.asarray(o_ref)).max())

@@ -8,10 +8,20 @@ The load-bearing contracts:
   on release, admission is all-or-nothing);
 * continuous batching preserves per-request generations exactly: packed
   prefill + paged decode through the engine reproduces one-request-at-a-time
-  contiguous serving token for token.
+  contiguous serving token for token;
+* distributed paged serving (page-aligned pool shards, per-shard local
+  attention + online-softmax partial merge) reproduces the single-device
+  engine token for token — partial-state math in the fast tier, the real
+  multi-device engine in a slow-tier subprocess with fake CPU devices;
+* EOS finish: a sequence that emits its eos_id is evicted immediately (pages
+  freed, decode steps saved), with the generation a prefix of the budget run.
 """
 
 import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +29,8 @@ import numpy as np
 import pytest
 
 from conftest import max_err
-from repro.core.attention import spark_paged_decode
+from repro.core import online_softmax as osm
+from repro.core.attention import spark_paged_decode, spark_paged_decode_partials
 from repro.kernels.ops import (decode, gather_pages, paged_decode,
                                paged_decode_reference)
 from repro.serving import (BlockTables, PageAllocator, PagedCacheConfig,
@@ -97,6 +108,67 @@ def test_spark_paged_decode_xla_matches_kernel(rng_key):
 
 
 # ---------------------------------------------------------------------------
+# distributed building block: per-shard partials + online-softmax merge
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+@pytest.mark.parametrize("window", [None, 20], ids=["full", "win20"])
+def test_paged_partials_merge_equals_full(rng_key, impl, window):
+    """Split the pool into two page-aligned 'shards' by hand: local partial
+    attention per shard (non-local table entries remapped to the shard's
+    trash page and masked via block_valid) merged with online_softmax.merge
+    must reproduce the single-pool decode — the distributed serving math,
+    exercised without any devices."""
+    b, hq, hkv, d, ps, t = 3, 8, 2, 64, 16, 4
+    num_pages, n_shards = 8, 2
+    n_local = num_pages // n_shards
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (b, hq, d))
+    kp = jax.random.normal(ks[1], (hkv, num_pages, ps, d))
+    vp = jax.random.normal(ks[2], (hkv, num_pages, ps, d))
+    # pages 0 and 4 are the per-shard trash pages; tables use the rest
+    usable = np.array([1, 2, 3, 5, 6, 7])
+    rs = np.random.RandomState(1)
+    bt = jnp.asarray(np.stack([rs.permutation(usable)[:t] for _ in range(b)]
+                              ).astype(np.int32))
+    kv_len = jnp.array([t * ps, ps + 5, 3], jnp.int32)
+
+    full = spark_paged_decode(q, kp, vp, bt, kv_len, impl=impl, window=window)
+    states = []
+    for s in range(n_shards):
+        owner = bt // n_local
+        valid = (owner == s).astype(jnp.int32)
+        bt_local = jnp.where(owner == s, bt % n_local, 0)
+        acc, m, l = spark_paged_decode_partials(
+            q, kp[:, s * n_local:(s + 1) * n_local],
+            vp[:, s * n_local:(s + 1) * n_local], bt_local, kv_len,
+            block_valid=valid, impl=impl, window=window)
+        states.append(osm.SoftmaxState(m=m, l=l, acc=acc))
+    o, _ = osm.finalize(osm.merge(states[0], states[1]), out_dtype=q.dtype)
+    assert max_err(o, full) < 2e-5
+
+
+def test_paged_partials_trash_poison_inert(rng_key):
+    """Poisoning a shard's trash page must not leak through block_valid."""
+    b, hq, hkv, d, ps, t = 2, 4, 2, 32, 16, 2
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (b, hq, d))
+    kp = jax.random.normal(ks[1], (hkv, 4, ps, d))
+    vp = jax.random.normal(ks[2], (hkv, 4, ps, d))
+    bt = jnp.array([[1, 2], [3, 1]], jnp.int32)
+    kv_len = jnp.array([2 * ps, ps + 3], jnp.int32)
+    valid = jnp.array([[1, 0], [0, 1]], jnp.int32)   # pretend half is foreign
+    bt_masked = jnp.where(valid == 1, bt, 0)
+    ref = spark_paged_decode_partials(q, kp, vp, bt_masked, kv_len,
+                                      block_valid=valid, impl="xla")
+    kp2 = kp.at[:, 0].set(1e6)                       # poison the trash page
+    out = spark_paged_decode_partials(q, kp2, vp, bt_masked, kv_len,
+                                      block_valid=valid, impl="xla")
+    for a, b_ in zip(ref, out):
+        assert max_err(a, b_) == 0.0
+
+
+# ---------------------------------------------------------------------------
 # cache bookkeeping
 # ---------------------------------------------------------------------------
 
@@ -110,6 +182,25 @@ def test_page_allocator_invariants():
     a.free(got)
     assert a.num_free == 5
     assert sorted(a.alloc(5)) == [1, 2, 3, 4, 5]
+
+
+def test_page_allocator_per_shard_trash_pages():
+    """Distributed pool: page 0 of every shard (global s·P) is reserved."""
+    a = PageAllocator(num_pages=8, num_shards=2)     # trash: 0 and 4
+    assert a.num_free == 6
+    got = a.alloc(6)
+    assert sorted(got) == [1, 2, 3, 5, 6, 7]
+    with pytest.raises(AssertionError):
+        a.free([4])                                  # shard-1 trash page
+    a.free(got)
+    assert a.num_free == 6
+    # config level: validation + derived geometry
+    cfg = PagedCacheConfig(page_size=4, num_pages=8, max_batch=2,
+                           max_pages_per_seq=4, num_shards=2)
+    assert cfg.trash_pages == frozenset({0, 4}) and cfg.usable_pages == 6
+    with pytest.raises(ValueError):                  # pages straddle shards
+        PagedCacheConfig(page_size=4, num_pages=9, max_batch=2,
+                         max_pages_per_seq=4, num_shards=2)
 
 
 def test_block_tables_admit_release_utilization():
@@ -166,6 +257,25 @@ def test_scheduler_waves_and_fcfs():
     with pytest.raises(ValueError):              # can never fit → reject early
         sched.submit(Request(rid=9, tokens=np.zeros(14, np.int32),
                              max_new_tokens=4))
+
+
+def test_eos_finishes_sequence_early():
+    """ActiveSeq.done fires on the EOS token, not just the budget."""
+    from repro.serving import ActiveSeq
+    req = Request(rid=0, tokens=np.zeros(4, np.int32), max_new_tokens=8,
+                  eos_id=7)
+    seq = ActiveSeq(request=req, slot=0)
+    seq.generated.extend([3, 5])
+    assert not seq.done
+    seq.generated.append(7)                      # EOS
+    assert seq.done
+    # without an eos_id the same tokens run to the budget
+    req2 = Request(rid=1, tokens=np.zeros(4, np.int32), max_new_tokens=8)
+    seq2 = ActiveSeq(request=req2, slot=1)
+    seq2.generated.extend([3, 5, 7])
+    assert not seq2.done
+    seq2.generated.extend([7] * 5)
+    assert seq2.done                             # budget
 
 
 # ---------------------------------------------------------------------------
@@ -275,3 +385,89 @@ def test_packed_prefill_matches_per_prompt_prefill():
     # trash page and absorbs each layout's different padding writes.
     for lp, ls in zip(jax.tree.leaves(caches_p), jax.tree.leaves(caches_s)):
         assert max_err(lp[..., 1:, :, :], ls[..., 1:, :, :]) < 1e-5
+
+
+def test_engine_eos_early_finish():
+    """EOS eviction: generation is a prefix of the budget run, the decode
+    loop stops spending steps on the finished sequence, and its pages return
+    to the pool."""
+    from repro.models import lm
+    from repro.serving import ServingEngine
+
+    cfg = _smoke_cfg()
+    params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rs = np.random.RandomState(0)
+    prompt = rs.randint(0, cfg.vocab_size, size=12).astype(np.int32)
+    pcfg = PagedCacheConfig(page_size=8, num_pages=8, max_batch=2,
+                            max_pages_per_seq=3)
+
+    def run(eos_id):
+        eng = ServingEngine(cfg, pcfg, params, impl="xla", prefill_len=24,
+                            xla_chunk=16)
+        eng.submit(prompt, 8, eos_id=eos_id)
+        out, stats = eng.run()
+        assert eng.scheduler.tables.allocator.num_free == pcfg.usable_pages
+        return out[0], stats
+
+    ref, ref_stats = run(None)                       # runs to the budget
+    assert len(ref) == 8
+    eos = int(ref[2])                                # make step 3 the EOS
+    got, got_stats = run(eos)
+    assert list(got) == list(ref[:3])                # prefix, ends at EOS
+    assert got_stats["decode_steps"] < ref_stats["decode_steps"]
+
+
+# ---------------------------------------------------------------------------
+# distributed: sharded engine ≡ single-device engine (fake CPU devices)
+# ---------------------------------------------------------------------------
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_sharded_engine_matches_single_device():
+    """Paged serving on a 2-way ("model",) mesh — page pool sharded
+    page-aligned, decode via per-shard partials + online-softmax merge —
+    reproduces the single-device engine token for token. Subprocess: the
+    fake-device XLA flag must be set before jax initialises."""
+    code = """
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro import configs
+from repro.launch.mesh import make_mesh
+from repro.models import lm
+from repro.serving import PagedCacheConfig, ServingEngine
+
+cfg = dataclasses.replace(configs.smoke_config("qwen3_14b"),
+                          dtype=jnp.float32, remat=False)
+params, _ = lm.init_params(cfg, jax.random.PRNGKey(0), vocab_pad_to=2)
+rs = np.random.RandomState(0)
+reqs = [(rs.randint(0, cfg.vocab_size, size=L).astype(np.int32), g)
+        for L, g in [(12, 6), (7, 8), (12, 1), (7, 5)]]
+
+pcfg = PagedCacheConfig(page_size=8, num_pages=8, max_batch=2,
+                        max_pages_per_seq=3)
+eng1 = ServingEngine(cfg, pcfg, params, impl="xla", prefill_len=24,
+                     xla_chunk=16)
+out1, _ = eng1.run(list(reqs))
+
+mesh = make_mesh((2,), ("model",))
+pcfg2 = dataclasses.replace(pcfg, num_shards=2)
+eng2 = ServingEngine(cfg, pcfg2, params, impl="xla", prefill_len=24,
+                     xla_chunk=16, mesh=mesh)
+out2, stats2 = eng2.run(list(reqs))
+
+assert set(out1) == set(out2)
+for rid in out1:
+    assert np.array_equal(out1[rid], out2[rid]), \\
+        f"request {rid}: sharded {out2[rid]} != single-device {out1[rid]}"
+assert eng2.scheduler.tables.allocator.num_free == pcfg2.usable_pages
+print("PASS")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         env=env, capture_output=True, text=True, timeout=480)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
+    assert "PASS" in out.stdout

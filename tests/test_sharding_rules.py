@@ -10,7 +10,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro import configs
-from repro.distributed.sharding import default_rules, _fsdp_rules
+from repro.distributed.sharding import default_rules, _fsdp_rules, vocab_pad_for
 
 
 def fake_mesh(shape, axes):
@@ -23,17 +23,7 @@ def fake_mesh(shape, axes):
 MESH = fake_mesh((16, 16), ("data", "model"))
 MESH3 = fake_mesh((2, 16, 16), ("pod", "data", "model"))
 
-# Known seed-state disagreement between these expectations and the rule engine
-# (it FSDP-shards the leading embed/vocab axis over (data, model) where the
-# tests expect pure TP / replication; the sharded-vs-single-device numeric
-# mismatch in tests/test_distributed.py shares the root cause). Tracked as a
-# ROADMAP open item; xfail keeps the regression visible without masking it.
-_seed_rules_bug = pytest.mark.xfail(
-    reason="seed: sharding-rule engine vs. test expectations (see ROADMAP)",
-    strict=False)
 
-
-@_seed_rules_bug
 def test_divisible_dims_shard():
     cfg = configs.get_config("granite_3_2b")
     rules = default_rules(MESH, cfg)
@@ -63,7 +53,6 @@ def test_non_divisible_heads_with_ctx_parallel_shard_seq():
     assert spec == P("data", None, "model", None)
 
 
-@_seed_rules_bug
 def test_axis_used_at_most_once():
     cfg = configs.get_config("deepseek_moe_16b")   # kv_heads=16 divisible
     rules = default_rules(MESH, cfg)
@@ -80,7 +69,6 @@ def test_axis_used_at_most_once():
     assert spec2 == P("data", None, "model", None)
 
 
-@_seed_rules_bug
 def test_multipod_batch_spans_pod_and_data():
     cfg = configs.get_config("granite_3_2b")
     rules = default_rules(MESH3, cfg)
@@ -103,12 +91,58 @@ def test_fsdp_profile_shards_params_over_both_axes():
     assert rules.rules["heads"] is None and rules.rules["mlp"] is None
 
 
-@_seed_rules_bug
 def test_vocab_padding_divisibility():
     cfg = configs.get_config("granite_3_2b")  # vocab 49155 (odd)
     rules = default_rules(MESH, cfg)
     assert rules.spec_for(("vocab", "embed"), (49155, 2048)) == P(None, None)
     assert rules.spec_for(("vocab", "embed"), (49168, 2048)) == P("model", None)
+
+
+def test_fsdp_profile_needs_explicit_opt_in():
+    """The seed bug: sharding_profile="fsdp" alone (a scale annotation) must
+    NOT strip TP — only fsdp=True opts a config into the ZeRO-3 profile."""
+    cfg = configs.get_config("granite_3_2b")      # profile "fsdp", fsdp=False
+    assert cfg.sharding_profile == "fsdp" and not cfg.fsdp
+    rules = default_rules(MESH, cfg)
+    assert rules.rules["mlp"] == "model"          # TP kept
+    assert rules.rules["vocab"] == "model"
+    assert rules.rules["embed"] is None           # no FSDP param sharding
+    # with the opt-in, the same config takes the full ZeRO-3 profile
+    import dataclasses
+    cfg2 = dataclasses.replace(cfg, fsdp=True)
+    rules2 = default_rules(MESH, cfg2)
+    assert rules2.rules["embed"] == ("data", "model")
+    assert rules2.rules["mlp"] is None
+    # serving never takes the train-only ZeRO profile
+    rules3 = default_rules(MESH, cfg2, serve=True)
+    assert rules3.rules["mlp"] == "model"
+
+
+def test_fsdp_rules_direct():
+    """_fsdp_rules unit contract: params + batch over (data, model) jointly,
+    no TP anywhere, pod left as pure gradient-replica DP."""
+    cfg = configs.get_config("deepseek_67b")
+    rules = _fsdp_rules(MESH, cfg)
+    assert rules.rules["batch"] == ("data", "model")
+    assert rules.rules["embed"] == ("data", "model")
+    assert rules.rules["moe_groups"] == ("data", "model")
+    for name in ("heads", "kv_heads", "mlp", "vocab", "experts", "rnn",
+                 "q_proj", "kv_proj", "kv_cache_seq", "seq"):
+        assert rules.rules[name] is None, name
+    # pod axis untouched on the 3-axis mesh (pure replica DP)
+    rules3 = _fsdp_rules(MESH3, cfg)
+    assert rules3.rules["batch"] == ("data", "model")
+    # divisibility fallback still applies: embed dim not divisible by 256
+    assert rules.spec_for(("embed", "mlp"), (100, 22016)) == P(None, None)
+    # one-axis mesh degrades to a scalar axis entry
+    mesh1 = fake_mesh((8,), ("data",))
+    assert _fsdp_rules(mesh1, cfg).rules["embed"] == "data"
+
+
+def test_vocab_pad_for():
+    assert vocab_pad_for(MESH) == 16
+    assert vocab_pad_for(MESH3) == 16
+    assert vocab_pad_for(fake_mesh((8,), ("data",))) == 1  # no model axis
 
 
 def test_all_archs_build_rules_on_both_meshes():

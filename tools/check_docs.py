@@ -1,12 +1,16 @@
 #!/usr/bin/env python
 """Docs drift guard (CI `docs` job; run locally with `python tools/check_docs.py`).
 
-Two cheap checks that catch the usual ways docs rot:
+Three cheap checks that catch the usual ways docs rot:
 
 1. every relative markdown link in README.md and docs/*.md resolves to a file
    or directory in the repo (anchors and external URLs are skipped);
 2. every package under src/repro/ is mentioned in docs/architecture.md, so a
-   new subsystem cannot land undocumented.
+   new subsystem cannot land undocumented;
+3. every ``*.md`` file referenced from Python source (docstrings/comments —
+   e.g. "see docs/serving.md") exists in the repo, so code cannot keep
+   pointing readers at deleted design notes (the seed's docstrings cited two
+   long-gone design/experiment logs for two PRs).
 
 Exit code 0 = clean; 1 = drift, with one line per problem.
 """
@@ -59,8 +63,41 @@ def check_architecture_coverage() -> list:
     return problems
 
 
+MD_REF_RE = re.compile(r"[A-Za-z0-9_][A-Za-z0-9_./-]*\.md\b")
+PY_DIRS = ("src", "tests", "tools", "benchmarks", "examples")
+
+
+def check_py_doc_refs() -> list:
+    """Flag repo-doc (.md) references in Python files that resolve nowhere.
+
+    A reference counts as resolved if it exists relative to the repo root,
+    the referencing file's directory, or docs/ (prose often drops the docs/
+    prefix). Dotted module paths that merely end in ".md" cannot occur — the
+    regex requires the .md to terminate the token.
+    """
+    problems = []
+    for d in PY_DIRS:
+        base = ROOT / d
+        if not base.is_dir():
+            continue
+        for py in sorted(base.rglob("*.py")):
+            if "__pycache__" in py.parts:
+                continue
+            for lineno, line in enumerate(py.read_text().splitlines(), 1):
+                for ref in MD_REF_RE.findall(line):
+                    name = ref.lstrip("./")
+                    candidates = (ROOT / name, py.parent / name,
+                                  ROOT / "docs" / name)
+                    if not any(c.exists() for c in candidates):
+                        problems.append(
+                            f"{py.relative_to(ROOT)}:{lineno}: reference to "
+                            f"nonexistent repo doc '{ref}'")
+    return problems
+
+
 def main() -> int:
-    problems = check_links() + check_architecture_coverage()
+    problems = (check_links() + check_architecture_coverage()
+                + check_py_doc_refs())
     for p in problems:
         print(p)
     print(f"check_docs: {'FAIL' if problems else 'ok'} "
