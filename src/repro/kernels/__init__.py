@@ -1,3 +1,8 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the paper's fused-MHA hot spots.
+
+The compute the paper optimizes with custom CUDA kernels, re-targeted to TPU:
+``flash_fwd``/``flash_bwd`` (fused training attention), ``decode`` (contiguous
+and paged flash-decode), ``rng`` (counter-based dropout bits), glued into
+autodiff by ``ops`` with the two oracles in ``ref``.  The paper→kernel map
+lives in docs/kernels.md.
+"""

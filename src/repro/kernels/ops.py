@@ -28,6 +28,7 @@ from repro.kernels import ref
 
 @dataclasses.dataclass(frozen=True)
 class AttnConfig:
+    """Static attention options (hashable → usable as a jit nondiff argnum)."""
     causal: bool = False
     window: Optional[int] = None
     scale: Optional[float] = None

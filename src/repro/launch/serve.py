@@ -8,6 +8,12 @@ Paged continuous batching (block-table cache, ragged synthetic requests):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_14b --smoke \\
       --paged --requests 8 --page-size 16 --gen 32
 
+Lazy admission (prompt-only page reservation, one-page decode growth,
+youngest-row preemption + re-prefill when the pool runs dry — higher page
+utilization than the default eager full-budget reservation):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3_14b --smoke \\
+      --paged --lazy --requests 8 --gen 32
+
 Distributed paged serving (page pool sharded over the mesh's model axis;
 needs that many devices, e.g. XLA_FLAGS=--xla_force_host_platform_device_count=2):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_14b --smoke \\
@@ -48,6 +54,12 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4,
                     help="--paged: concurrent decode slots")
+    ap.add_argument("--lazy", action="store_true",
+                    help="--paged: lazy page growth + preemption/re-prefill "
+                         "instead of eager full-budget reservation")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="--paged: override the page-pool size (0 = auto; "
+                         "shrink it to watch --lazy preempt)")
     args = ap.parse_args(argv)
 
     cfg = (configs.smoke_config(args.arch) if args.smoke
@@ -106,8 +118,8 @@ def serve_paged(cfg, args, mesh=None):
     # pool sized so roughly half the requests fit at once — the scheduler
     # has to actually evict/admit, which is the scenario being demoed —
     # then padded so the page-aligned shard split divides evenly
-    num_pages = n_shards + max(2, args.requests // 2) * (
-        -(-budget // args.page_size) + 1)
+    num_pages = args.num_pages or (n_shards + max(2, args.requests // 2) * (
+        -(-budget // args.page_size) + 1))
     num_pages = -(-num_pages // n_shards) * n_shards
     pcfg = PagedCacheConfig(
         page_size=args.page_size,
@@ -115,18 +127,27 @@ def serve_paged(cfg, args, mesh=None):
         max_pages_per_seq=-(-budget // args.page_size) + 1,
         num_pages=num_pages,
         num_shards=n_shards)
+    # lazy mode: a preempted row re-prefills prompt+generated, so the prefill
+    # row must hold a full budget
+    prefill_len = max(args.prompt_len, args.page_size)
+    if args.lazy:
+        prefill_len = max(prefill_len, budget)
     eng = ServingEngine(cfg, pcfg, params, impl=args.impl, mesh=mesh,
-                        prefill_len=max(args.prompt_len, args.page_size))
+                        prefill_len=prefill_len, lazy=args.lazy)
     reqs = []
     for _ in range(args.requests):  # ragged: 25%..100% of the nominal lengths
         plen = int(rs.randint(max(1, args.prompt_len // 4), args.prompt_len + 1))
         gen = int(rs.randint(max(1, args.gen // 4), args.gen + 1))
         reqs.append((rs.randint(0, cfg.vocab_size, size=plen), gen))
     out, stats = eng.run(reqs)
+    mode = "lazy" if args.lazy else "eager"
     print(f"served {len(out)} requests ({stats['generated_tokens']:.0f} tokens) "
           f"in {stats['wall_s']*1e3:.1f}ms: {stats['tokens_per_s']:.1f} tok/s, "
           f"{stats['decode_steps']:.0f} decode steps, "
-          f"cache utilization {stats['mean_utilization']:.1%}")
+          f"{mode} page utilization {stats['mean_utilization']:.1%}")
+    print(f"scheduler: {stats['preemptions']:.0f} preemptions, "
+          f"{stats['pages_grown']:.0f} pages grown lazily, "
+          f"{stats['pages_reclaimed']:.0f} out-of-window pages reclaimed")
     print("generated (request 0):", out[0][:16])
 
 

@@ -135,6 +135,20 @@ def apply_mlp(p, x, ctx: Ctx, *, gated: bool = True):
 # Attention block (the paper's technique lives here)
 # ---------------------------------------------------------------------------
 
+def paged_decode_window(cfg) -> Optional[int]:
+    """The sliding window the *paged* decode path masks with (None = full
+    attention).
+
+    Single source of truth shared by the kernel calls below and the serving
+    engine's out-of-window page reclamation: the engine may free exactly the
+    pages whose every position this mask excludes, so the two must agree or
+    reclamation would free pages the kernel still reads.  (The contiguous
+    decode path instead keeps a ``window``-slot ring buffer and needs no
+    mask — see the decode branch in :func:`apply_attention`.)
+    """
+    return cfg.attn_window
+
+
 def init_attention(key, cfg, dtype):
     """cfg: ArchConfig-like with num_heads/num_kv_heads/head_dim/d_model/qk_norm."""
     ks = jax.random.split(key, 4)
@@ -213,7 +227,8 @@ def apply_attention(p, x, ctx: Ctx, cfg, *, positions=None, cache=None,
                 o, ck, cv = paged_append_decode_sharded(
                     q[:, :, 0, :], k[:, :, 0, :], v[:, :, 0, :],
                     cache["k_pages"], cache["v_pages"], bt, kvl,
-                    mesh=ctx.mesh, impl=ctx.impl, window=cfg.attn_window)
+                    mesh=ctx.mesh, impl=ctx.impl,
+                    window=paged_decode_window(cfg))
                 o = o[:, :, None, :]
             else:
                 ps = cache["k_pages"].shape[2]
@@ -224,11 +239,14 @@ def apply_attention(p, x, ctx: Ctx, cfg, *, positions=None, cache=None,
                                     k[:, :, 0, :].transpose(1, 0, 2))
                 cv = _scatter_pages(cache["v_pages"], dest,
                                     v[:, :, 0, :].transpose(1, 0, 2))
-                # no ring buffer here — sliding windows mask inside the kernel
-                # (out-of-window pages could be freed early; ROADMAP follow-up)
+                # no ring buffer here — sliding windows mask inside the
+                # kernel, and the engine frees fully-masked-out pages early
+                # (their table entries revert to the trash page, which this
+                # same window gate skips without reading)
                 o = spark_paged_decode(q[:, :, 0, :], ck, cv, bt, kvl + 1,
                                        impl=ctx.impl,
-                                       window=cfg.attn_window)[:, :, None, :]
+                                       window=paged_decode_window(cfg)
+                                       )[:, :, None, :]
             new_cache = {"k_pages": ck, "v_pages": cv}
             o = ctx.c(o, "batch", "heads", "seq_full", "head_dim")
             out = o.transpose(0, 2, 1, 3).reshape(b, s, hq * hd) @ p["wo"]

@@ -7,11 +7,17 @@ allocated on admission and freed on completion, with per-sequence block
 tables mapping logical KV blocks → physical pages (vLLM's PagedAttention
 idea, built on this repo's scalar-prefetch ragged-skip machinery):
 
-* ``paged_cache``  — page allocator, block tables, scatter-destination math.
-* ``scheduler``    — FCFS continuous batching: admit/evict between steps.
+* ``paged_cache``  — page allocator, block tables (per-block ownership:
+                     lazy growth + out-of-window reclamation), scatter math.
+* ``scheduler``    — FCFS continuous batching as an admission → grow →
+                     preempt → re-prefill state machine: eager (full-budget
+                     reservation) or lazy (prompt-only admission, one-page
+                     decode growth, youngest-row preemption when the pool
+                     runs dry).  See docs/scheduling.md.
 * ``engine``       — the serving loop: segment-aware packed prefill (one
                      fused forward fills many prompts' pages, PR-1 varlen
-                     masking) + block-table flash-decode each step.
+                     masking) + block-table flash-decode each step, with
+                     sliding-window page reclamation between steps.
 
 Kernel-level entry points live in ``core.attention.spark_paged_decode`` and
 ``kernels/decode.py::flash_paged_decode``; jitted model steps come from

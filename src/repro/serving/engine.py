@@ -1,22 +1,34 @@
 """Continuous-batching serving engine over the paged KV cache.
 
-Ties the pieces together: the scheduler admits/evicts between decode steps,
-admissions are packed into fused prefill rows (segment-aware: one forward
-fills every admitted prompt's pages), and the decode step runs all active
-slots against the page pool via block tables.  Greedy sampling; a request
-finishes when it emits its ``eos_id`` (set per request or engine-wide) or
-exhausts ``max_new_tokens`` — EOS eviction frees the slot and pages
-immediately instead of decoding dead tokens to the budget.
+Ties the pieces together: between decode steps the scheduler evicts finished
+sequences, reclaims pages that slid out of a sliding attention window, grows
+every running sequence's next write page (lazy mode — preempting the youngest
+row when the pool runs dry), and admits waiting requests; admissions are
+packed into fused prefill rows (segment-aware: one forward fills every
+admitted prompt's pages), and the decode step runs all active slots against
+the page pool via block tables.  Greedy sampling; a request finishes when it
+emits its ``eos_id`` (set per request or engine-wide) or exhausts
+``max_new_tokens`` — EOS eviction frees the slot and pages immediately.
+
+Admission policy (``lazy=``): eager reserves a sequence's full page budget up
+front and never preempts; lazy reserves only the prompt pages, grows decode
+pages one at a time, and re-prefills preempted rows with their generated
+tokens appended to the prompt — token-identical to eager under greedy decode
+(tests assert it), at strictly higher pool utilization.  The state machine
+and its invariants are documented in docs/scheduling.md.
 
 The jitted steps see fixed shapes only — [B=max_batch] decode rows, packed
 prefill rows of ``prefill_len`` — so the whole ragged, churning workload runs
-on exactly two compilations.
+on exactly two compilations; growth/preemption/reclamation rewrite nothing
+but the tiny host-side block-table arrays re-shipped each step.
 
 Distributed serving: pass ``mesh=`` (with ``PagedCacheConfig.num_shards`` =
 the mesh's model-axis size) and the page pools shard page-aligned over the
 mesh while decode runs per-shard local attention + online-softmax partial
 merge (distributed/paged.py). The host-side scheduler/allocator logic is
-byte-identical in both modes — block tables keep global page ids.
+byte-identical in both modes — block tables keep global page ids, so every
+shard sees the same post-growth/post-reclaim tables each step (per-shard
+lockstep for free).
 """
 
 from __future__ import annotations
@@ -28,21 +40,40 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models.layers import paged_decode_window
 from repro.runtime.steps import make_serve_steps
-from repro.serving.paged_cache import PagedCacheConfig
+from repro.serving.paged_cache import PagedCacheConfig, TRASH_PAGE
 from repro.serving.scheduler import ActiveSeq, Request, Scheduler
 
 
 class ServingEngine:
+    """The serving loop: scheduler decisions → the two jitted steps."""
+
     def __init__(self, cfg, paged_cfg: PagedCacheConfig, params, *,
                  impl: str = "xla", prefill_len: Optional[int] = None,
                  xla_chunk: int = 1024, mesh=None,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None, lazy: bool = False,
+                 reclaim: Optional[bool] = None,
+                 poison_reclaimed: bool = False):
+        """lazy: admission policy (module docstring). reclaim: free
+        fully-out-of-window pages each step — defaults to "whenever the arch
+        has a sliding window"; pass False to pin pages for a model's whole
+        residency (the pre-reclamation behaviour, kept for A/B tests).
+        poison_reclaimed: test hook — overwrite freed pages and the trash
+        page with a huge constant, so any kernel read of a reclaimed page
+        corrupts the output instead of passing silently."""
         assert cfg.causal, "serving needs an autoregressive arch"
         self.cfg = cfg
         self.pcfg = paged_cfg
         self.prefill_len = prefill_len or paged_cfg.max_seq_len
         self.eos_id = eos_id                     # default for submissions
+        self.lazy = lazy
+        self.window = paged_decode_window(cfg)
+        self.reclaim = (self.window is not None) if reclaim is None else reclaim
+        if self.reclaim and self.window is None:
+            raise ValueError("page reclamation needs a sliding-window arch "
+                             "(cfg.attn_window is None)")
+        self.poison_reclaimed = poison_reclaimed
         arts = make_serve_steps(cfg, mesh=mesh, impl=impl, paged=paged_cfg,
                                 xla_chunk=min(xla_chunk, self.prefill_len))
         if mesh is not None and arts.rules is not None:
@@ -57,13 +88,20 @@ class ServingEngine:
         self.prefill_fn = arts.prefill_fn
         self.decode_fn = arts.decode_fn
         self.caches = arts.cache_init_fn()
-        self.scheduler = Scheduler(paged_cfg)
+        # the scheduler learns the window only when reclamation is on: with
+        # reclaim=False pinned-pages runs keep the full-prefix reservation
+        # so they reflect the pre-reclamation footprint faithfully
+        self.scheduler = Scheduler(
+            paged_cfg, lazy=lazy,
+            window=self.window if self.reclaim else None)
         self.util_samples: List[float] = []
+        self.pool_samples: List[float] = []      # allocated / usable pages
         self._next_rid = 0
 
     # -- request intake ----------------------------------------------------
     def submit(self, tokens, max_new_tokens: int, rid: Optional[int] = None,
                eos_id: Optional[int] = None):
+        """Queue one request; validates it can ever be served."""
         tokens = np.asarray(tokens, np.int32)
         if rid is None:
             rid = self._next_rid
@@ -75,6 +113,13 @@ class ServingEngine:
         if req.prompt_len > self.prefill_len:
             raise ValueError(f"prompt of {req.prompt_len} tokens exceeds "
                              f"prefill_len={self.prefill_len}")
+        if self.lazy and req.budget_tokens > self.prefill_len:
+            # a preempted row re-prefills prompt+generated, which can reach
+            # the full budget — reject now rather than overflow a row later
+            raise ValueError(
+                f"request {rid}: lazy serving needs prefill_len >= the "
+                f"prompt+generation budget ({req.budget_tokens}) so a "
+                f"preempted sequence can re-prefill")
         if self.pcfg.pages_for(req.budget_tokens) > self.pcfg.usable_pages:
             raise ValueError(f"request {rid} needs more pages than the pool "
                              f"holds ({self.pcfg.usable_pages} usable)")
@@ -83,6 +128,7 @@ class ServingEngine:
 
     # -- one packed prefill wave -------------------------------------------
     def _pack_rows(self, seqs: List[ActiveSeq]) -> List[List[ActiveSeq]]:
+        """First-fit pack admitted prompts into prefill_len-wide rows."""
         rows: List[List[ActiveSeq]] = [[]]
         used = 0
         for seq in seqs:  # first-fit in admission order
@@ -95,6 +141,7 @@ class ServingEngine:
         return rows
 
     def _prefill(self, seqs: List[ActiveSeq]):
+        """Run packed prefill over newly admitted (or resumed) sequences."""
         tables = self.scheduler.tables
         for row in self._pack_rows(seqs):
             tokens = np.zeros((1, self.prefill_len), np.int32)
@@ -120,12 +167,13 @@ class ServingEngine:
 
     # -- one decode step over every active slot ----------------------------
     def _decode(self):
+        """One fixed-shape decode step over all max_batch slots."""
         sched = self.scheduler
         tables = sched.tables
         tok = np.zeros((self.pcfg.max_batch,), np.int32)
         for slot, seq in sched.active.items():
             assert tables.append_dest_ok(slot), \
-                f"slot {slot}: write position escaped its reserved pages"
+                f"slot {slot}: write position escaped its owned pages"
             tok[slot] = seq.generated[-1]
         logits, self.caches = self.decode_fn(
             self.params, jnp.asarray(tok), self.caches,
@@ -134,6 +182,17 @@ class ServingEngine:
         for slot, seq in sched.active.items():
             tables.kv_len[slot] += 1
             seq.generated.append(int(logits[slot].argmax()))
+
+    def _poison_pages(self, pages: List[int]):
+        """Test hook: clobber freed pages (plus the trash page their table
+        entries now alias) with 1e6 in every layer's pool — reads of a
+        reclaimed page then corrupt generations instead of silently reusing
+        stale KV.  The window/kv_len gates make poisoned pages inert; the
+        reclamation test asserts token-identity under this hook."""
+        idx = jnp.asarray(sorted(set(pages) | {TRASH_PAGE}), jnp.int32)
+        # the page axis of every pool leaf is ndim-3 ([... Hkv, P, ps, D])
+        self.caches = jax.tree.map(
+            lambda x: x.at[..., idx, :, :].set(1e6), self.caches)
 
     # -- the serving loop ---------------------------------------------------
     def run(self, requests: Optional[List[Tuple[np.ndarray, int]]] = None
@@ -147,25 +206,43 @@ class ServingEngine:
         steps = 0
         while not sched.idle:
             sched.evict_finished()
+            if self.reclaim and sched.active:
+                freed = sched.reclaim(self.window)
+                if freed and self.poison_reclaimed:
+                    self._poison_pages(freed)
+            n_pre = sched.preemptions
+            if sched.active:
+                sched.ensure_growth()  # running rows claim write pages first
             admitted = sched.admit()
             if admitted:
                 self._prefill(admitted)
                 sched.evict_finished()     # max_new == 1 finishes at prefill
             if sched.active:
-                self.util_samples.append(
-                    sched.tables.utilization()["utilization"])
+                # just-prefilled rows may sit exactly on a page boundary;
+                # this second pass may preempt one of them (its prefill work
+                # survives in generated_prefix and resumes later)
+                sched.ensure_growth()
+            if sched.active:
+                u = sched.tables.utilization()
+                self.util_samples.append(u["utilization"])
+                self.pool_samples.append(u["pool_fraction"])
                 self._decode()
                 steps += 1
-            elif sched.waiting and not admitted:
+            elif sched.waiting and not admitted \
+                    and sched.preemptions == n_pre:
                 # an admitted wave may finish entirely at prefill
-                # (max_new == 1); that's progress, not a deadlock
+                # (max_new == 1) and a preemption wave empties the active
+                # set to retry next iteration; both are progress — only a
+                # step with no admission, no preemption and nothing active
+                # is a real deadlock
                 raise RuntimeError(
                     "scheduler stuck: nothing active yet nothing admissible "
                     "— the page pool is too small for the waiting requests")
         wall = time.perf_counter() - t0
-        out = {seq.request.rid: np.asarray(seq.generated, np.int32)
+        out = {seq.request.rid: np.asarray(seq.all_generated, np.int32)
                for seq in sched.finished}
         n_tok = sum(len(g) for g in out.values())
+        tables = sched.tables
         stats = {
             "wall_s": wall,
             "decode_steps": float(steps),
@@ -173,5 +250,10 @@ class ServingEngine:
             "tokens_per_s": n_tok / max(wall, 1e-9),
             "mean_utilization": (float(np.mean(self.util_samples))
                                  if self.util_samples else 0.0),
+            "mean_pool_fraction": (float(np.mean(self.pool_samples))
+                                   if self.pool_samples else 0.0),
+            "preemptions": float(sched.preemptions),
+            "pages_grown": float(tables.pages_grown),
+            "pages_reclaimed": float(tables.pages_reclaimed),
         }
         return out, stats

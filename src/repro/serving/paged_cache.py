@@ -9,10 +9,18 @@ The device side of the paged cache is a *global page pool* per attention layer
   padding-token writes all point there, so every table entry the kernel's
   BlockSpec index map reads is a valid page id even for skipped blocks.
 * :class:`BlockTables` — per-slot (concurrent-sequence) block tables and
-  ``kv_len``, numpy-backed; admission reserves a sequence's full page budget
-  up front (prompt + generation) and release returns it, so a running batch
-  can never OOM mid-flight.  Also computes the flat scatter destinations used
-  by packed prefill and reports pool utilization.
+  ``kv_len``, numpy-backed.  Ownership is tracked per *logical block*
+  (``slot → {block index → page id}``), which supports both admission
+  policies: **eager** reserves a sequence's full page budget up front
+  (prompt + generation, so a running batch can never run dry), while
+  **lazy** reserves only the prompt pages and grows the decode pages
+  (:meth:`grow`) one at a time as ``kv_len`` crosses page boundaries (higher pool
+  utilization; the scheduler preempts when growth fails).  Sliding-window
+  sequences additionally :meth:`reclaim_out_of_window` blocks that have
+  slid fully out of the attention window — their table entries return to
+  the trash page, which the kernels' window gate never reads.  Also
+  computes the flat scatter destinations used by packed prefill and
+  reports pool utilization.
 
 Everything here is plain numpy — the jitted steps receive the tables as fresh
 (tiny) device arrays each step, which is what lets the scheduler admit/evict
@@ -59,6 +67,7 @@ class PagedCacheConfig:
 
     @property
     def max_seq_len(self) -> int:
+        """Token capacity of one block-table row (table width × page size)."""
         return self.max_pages_per_seq * self.page_size
 
     @property
@@ -68,9 +77,11 @@ class PagedCacheConfig:
 
     @property
     def usable_pages(self) -> int:
+        """Allocatable pages: the pool minus one trash page per shard."""
         return self.num_pages - self.num_shards
 
     def pages_for(self, n_tokens: int) -> int:
+        """Pages covering ``n_tokens`` (ceiling division by page_size)."""
         return -(-n_tokens // self.page_size)
 
 
@@ -94,6 +105,7 @@ class PageAllocator:
 
     @property
     def num_free(self) -> int:
+        """Pages currently available to alloc()."""
         return len(self._free)
 
     def alloc(self, n: int) -> Optional[List[int]]:
@@ -103,13 +115,21 @@ class PageAllocator:
         return [self._free.pop() for _ in range(n)]
 
     def free(self, pages: List[int]):
+        """Return pages to the pool (release, preemption or reclamation)."""
         for p in pages:
             assert p not in self._trash, "trash pages are never allocated"
         self._free.extend(pages)
 
 
 class BlockTables:
-    """Per-slot block tables + lengths over one shared :class:`PageAllocator`."""
+    """Per-slot block tables + lengths over one shared :class:`PageAllocator`.
+
+    Ownership is per logical block (``slot → {block → page}``), so a row's
+    owned blocks need not be a prefix of its table: lazy growth appends the
+    next write block on demand, and sliding-window reclamation removes fully
+    out-of-window blocks from the low end (their entries revert to the trash
+    page — inert by the kernels' ``kv_len``/window gates).
+    """
 
     def __init__(self, cfg: PagedCacheConfig):
         self.cfg = cfg
@@ -117,29 +137,95 @@ class BlockTables:
         self.tables = np.full((cfg.max_batch, cfg.max_pages_per_seq),
                               TRASH_PAGE, np.int32)
         self.kv_len = np.zeros((cfg.max_batch,), np.int32)
-        self._owned: Dict[int, List[int]] = {}   # slot → allocated page ids
+        self._owned: Dict[int, Dict[int, int]] = {}  # slot → {block → page}
+        self.pages_grown = 0        # lazily-allocated decode pages (stats)
+        self.pages_reclaimed = 0    # out-of-window pages freed early (stats)
 
     def free_slots(self) -> List[int]:
+        """Decode slots not currently backing a sequence."""
         return [s for s in range(self.cfg.max_batch) if s not in self._owned]
 
-    def admit(self, slot: int, n_tokens: int) -> bool:
-        """Reserve pages for a sequence's full lifetime (prompt + gen)."""
+    def admit(self, slot: int, n_tokens: int, first_block: int = 0) -> bool:
+        """Reserve the pages covering ``n_tokens`` at logical blocks
+        ``first_block .. pages_for(n_tokens)-1``.
+
+        Eager admission passes the full lifetime budget (prompt + gen);
+        lazy admission passes only the prompt (decode pages come from
+        :meth:`grow`).  Sliding-window admission skips blocks already dead
+        on arrival via ``first_block`` — a resumed long-tail prompt then
+        reserves only its O(window) live tail, not the whole prefix; prefill
+        writes into skipped blocks land in the trash page (their table
+        entries stay 0) and the kernels' window gate never reads them.
+        All-or-nothing: False (no side effect) when the pool can't cover it.
+        """
         assert slot not in self._owned
         if n_tokens > self.cfg.max_seq_len:
             raise ValueError(
                 f"sequence of {n_tokens} tokens exceeds the block-table "
                 f"capacity {self.cfg.max_seq_len} (raise max_pages_per_seq)")
-        pages = self.allocator.alloc(self.cfg.pages_for(n_tokens))
+        n_blocks = self.cfg.pages_for(n_tokens)
+        assert 0 <= first_block < n_blocks
+        pages = self.allocator.alloc(n_blocks - first_block)
         if pages is None:
             return False
-        self._owned[slot] = pages
+        self._owned[slot] = {first_block + i: p for i, p in enumerate(pages)}
         self.tables[slot] = TRASH_PAGE
-        self.tables[slot, :len(pages)] = pages
+        self.tables[slot, first_block:n_blocks] = pages
         self.kv_len[slot] = 0
         return True
 
+    def grow(self, slot: int) -> bool:
+        """Ensure the next token's write block (``kv_len // page_size``) is
+        owned, allocating one page if it isn't.  Idempotent; returns False
+        (no side effect) when a page is needed but the pool is dry — the
+        scheduler's cue to preempt."""
+        blk = int(self.kv_len[slot]) // self.cfg.page_size
+        owned = self._owned[slot]
+        if blk in owned:
+            return True
+        if blk >= self.cfg.max_pages_per_seq:
+            raise ValueError(
+                f"slot {slot}: write position {int(self.kv_len[slot])} "
+                f"escapes the block-table capacity {self.cfg.max_seq_len}")
+        pages = self.allocator.alloc(1)
+        if pages is None:
+            return False
+        owned[blk] = pages[0]
+        self.tables[slot, blk] = pages[0]
+        self.pages_grown += 1
+        return True
+
+    def reclaim_out_of_window(self, slot: int, window: int) -> List[int]:
+        """Free this row's blocks that have slid fully out of a sliding
+        attention window; returns the freed page ids.
+
+        At the next decode step the query sits at position ``kv_len`` and the
+        kernels admit keys at positions ``kp > kv_len - window`` (the same
+        gate in the Pallas grid skip and the XLA fallback mask).  A block is
+        dead once its *last* position ``(blk+1)·page_size - 1`` falls at or
+        below ``kv_len - window`` — and stays dead, since ``kv_len`` only
+        grows.  Its table entry reverts to the trash page, which the window
+        gate skips without reading.
+        """
+        owned = self._owned.get(slot)
+        if not owned:
+            return []
+        ps = self.cfg.page_size
+        horizon = int(self.kv_len[slot]) - window  # last masked-out position
+        freed = []
+        for blk in sorted(owned):
+            if (blk + 1) * ps - 1 > horizon:
+                break                      # blocks are dead low-end-first
+            freed.append(owned.pop(blk))
+            self.tables[slot, blk] = TRASH_PAGE
+        if freed:
+            self.allocator.free(freed)
+            self.pages_reclaimed += len(freed)
+        return freed
+
     def release(self, slot: int):
-        self.allocator.free(self._owned.pop(slot))
+        """Return every page a slot owns (finish, EOS, or preemption)."""
+        self.allocator.free(list(self._owned.pop(slot).values()))
         self.tables[slot] = TRASH_PAGE
         self.kv_len[slot] = 0
 
@@ -161,16 +247,22 @@ class BlockTables:
         return dest
 
     def append_dest_ok(self, slot: int) -> bool:
-        """Does the next token's write position fall inside owned pages?"""
-        page = int(self.kv_len[slot]) // self.cfg.page_size
-        return page < len(self._owned.get(slot, ()))
+        """Does the next token's write position fall inside an owned page?"""
+        blk = int(self.kv_len[slot]) // self.cfg.page_size
+        return blk in self._owned.get(slot, {})
 
     def utilization(self) -> Dict[str, float]:
-        """Live tokens vs. reserved page capacity (the paged-vs-contiguous
-        memory argument: contiguous reserves max_batch × max_seq_len always)."""
+        """Live tokens vs. reserved page capacity — the admission-policy
+        metric: eager full-budget reservation holds pages long before tokens
+        exist, lazy growth tracks the live set (and reclamation drops tokens
+        that slid out of the window along with their pages)."""
+        ps = self.cfg.page_size
         allocated = sum(len(p) for p in self._owned.values())
-        cap = allocated * self.cfg.page_size
-        used = int(self.kv_len.sum())
+        cap = allocated * ps
+        used = 0                     # tokens resident in *owned* pages
+        for slot, owned in self._owned.items():
+            n = int(self.kv_len[slot])
+            used += sum(max(0, min(ps, n - blk * ps)) for blk in owned)
         return {
             "used_tokens": float(used),
             "allocated_tokens": float(cap),

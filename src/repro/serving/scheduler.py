@@ -2,15 +2,35 @@
 
 Requests arrive with a prompt and a generation budget; between decode steps
 the engine asks the scheduler to (a) evict finished sequences — returning
-their pages to the pool — and (b) admit waiting ones FCFS while both a free
-decode slot and the sequence's *full* page budget (prompt + generation,
-reserved up front by :class:`BlockTables`) are available.  Admission stops at
-the first request that doesn't fit, preserving arrival order; nothing is ever
-preempted mid-generation, so no re-prefill path is needed.
+their pages to the pool — (b) reclaim pages that slid out of a sliding
+attention window, (c) grow every running sequence's next write page, and
+(d) admit waiting requests FCFS while a free decode slot and their admission
+page budget are available.  Two admission policies share the machinery:
+
+* **eager** (default) — admission reserves the *full* lifetime budget
+  (``prompt + max_new`` pages) up front, so growth is a no-op and a running
+  batch can never run dry; utilization pays for the guarantee.
+* **lazy** (``lazy=True``) — admission reserves only the *prompt* pages and
+  decode pages are allocated one at a time as ``kv_len`` crosses page
+  boundaries.  When the pool runs dry mid-growth, the scheduler **preempts
+  the youngest running sequence**: its pages are freed and it re-queues at
+  the *front* of the waiting line with its generated tokens appended to the
+  prompt, to be **re-prefilled** later.  Greedy decode makes the resumed
+  generation token-identical to an unpreempted run (tests assert it).
+
+The state machine (docs/scheduling.md has the full picture)::
+
+    WAITING --admit--> ACTIVE --done/EOS--> FINISHED
+       ^                  |
+       +---- preempt -----+   (lazy only: growth failed → the youngest row
+                               is re-queued at the front of WAITING with
+                               prompt := prompt + generated)
 
 The scheduler is pure host-side state — it never touches device arrays.  The
 engine turns admissions into packed prefill calls and the active set into the
-per-step ``block_tables``/``kv_len`` arrays.
+per-step ``block_tables``/``kv_len`` arrays; preemption/growth/reclamation
+only rewrite those host arrays, so the fixed-shape jitted steps never
+recompile.
 """
 
 from __future__ import annotations
@@ -26,28 +46,37 @@ from repro.serving.paged_cache import BlockTables, PagedCacheConfig
 
 @dataclasses.dataclass
 class Request:
+    """One serving request (or the resumed tail of a preempted one)."""
     rid: int
     tokens: np.ndarray            # [prompt_len] int32
     max_new_tokens: int
     eos_id: Optional[int] = None  # finish early when this token is emitted
                                   # (None: run to the max_new_tokens budget)
+    generated_prefix: List[int] = dataclasses.field(default_factory=list)
+    # tokens generated before a preemption: they ride along in ``tokens`` for
+    # the re-prefill, and the engine stitches them back onto the output
 
     @property
     def prompt_len(self) -> int:
+        """Tokens the next prefill must process (original prompt, plus any
+        generated-so-far carried across a preemption)."""
         return int(self.tokens.shape[0])
 
     @property
     def budget_tokens(self) -> int:
-        # KV writes over the lifetime: the prompt plus every decode-step input
-        # token (prompt + max_new - 1); reserve one spare to keep the math
-        # obviously safe.
+        """KV writes over the remaining lifetime: the prompt plus every
+        decode-step input token (prompt + max_new - 1); one spare keeps the
+        math obviously safe.  Invariant under preemption — the resumed
+        request's longer prompt and smaller budget sum to the same total."""
         return self.prompt_len + self.max_new_tokens
 
 
 @dataclasses.dataclass
 class ActiveSeq:
+    """A request bound to a decode slot, plus its generation state."""
     request: Request
     slot: int
+    birth: int = 0                # admission stamp: preemption evicts max
     generated: List[int] = dataclasses.field(default_factory=list)
 
     @property
@@ -60,20 +89,38 @@ class ActiveSeq:
         return (eos is not None and bool(self.generated)
                 and self.generated[-1] == eos)
 
+    @property
+    def all_generated(self) -> List[int]:
+        """Full generation including tokens from before any preemption."""
+        return self.request.generated_prefix + self.generated
+
 
 class Scheduler:
-    def __init__(self, cfg: PagedCacheConfig):
+    """Admission / growth / preemption / eviction over one page pool."""
+
+    def __init__(self, cfg: PagedCacheConfig, *, lazy: bool = False,
+                 window: Optional[int] = None):
+        """window: the sliding attention window when page reclamation is on
+        (None otherwise).  Lazy admission uses it to skip blocks that are
+        dead on arrival — a preempted long-tail row resumes by reserving
+        only its O(window) live tail instead of the whole prefix."""
         self.cfg = cfg
+        self.lazy = lazy
+        self.window = window
         self.tables = BlockTables(cfg)
         self.waiting: Deque[Request] = collections.deque()
         self.active: Dict[int, ActiveSeq] = {}    # slot → sequence
         self.finished: List[ActiveSeq] = []
+        self.preemptions = 0
+        self._births = 0
 
     @property
     def idle(self) -> bool:
+        """Nothing waiting and nothing running — the serve loop's exit."""
         return not self.waiting and not self.active
 
     def submit(self, req: Request):
+        """Queue a request; rejects ones that could never fit the tables."""
         if req.budget_tokens > self.cfg.max_seq_len:
             raise ValueError(
                 f"request {req.rid}: prompt+generation of {req.budget_tokens} "
@@ -81,6 +128,7 @@ class Scheduler:
         self.waiting.append(req)
 
     def evict_finished(self) -> List[ActiveSeq]:
+        """Move done sequences to ``finished``, returning their pages."""
         done = [seq for seq in self.active.values() if seq.done]
         for seq in done:
             del self.active[seq.slot]
@@ -88,18 +136,95 @@ class Scheduler:
             self.finished.append(seq)
         return done
 
+    def reclaim(self, window: int) -> List[int]:
+        """Free every active row's fully-out-of-window pages (sliding-window
+        archs only); returns the freed page ids so the engine can poison them
+        under test.  Valid in both admission modes — reclaimed blocks sit
+        strictly below the write block, so eager's no-growth invariant holds."""
+        freed: List[int] = []
+        for slot in list(self.active):
+            freed.extend(self.tables.reclaim_out_of_window(slot, window))
+        return freed
+
+    def preempt(self, seq: ActiveSeq):
+        """Free a running sequence's pages and re-queue it for re-prefill.
+
+        The resumed request carries the original prompt *plus* everything
+        generated so far as its new prompt (greedy decode: re-prefilling the
+        full prefix reproduces the next token exactly), keeps the rid/EOS,
+        and shrinks the budget by what it already produced.  It goes to the
+        *front* of the waiting line: running work outranks new arrivals.
+        """
+        del self.active[seq.slot]
+        self.tables.release(seq.slot)
+        req = seq.request
+        self.waiting.appendleft(Request(
+            rid=req.rid,
+            tokens=np.concatenate(
+                [req.tokens, np.asarray(seq.generated, np.int32)]),
+            max_new_tokens=req.max_new_tokens - len(seq.generated),
+            eos_id=req.eos_id,
+            generated_prefix=req.generated_prefix + list(seq.generated)))
+        self.preemptions += 1
+
+    def ensure_growth(self) -> List[int]:
+        """Guarantee every surviving active row owns its next write page.
+
+        Oldest rows grow first; when the pool is dry the *youngest* active
+        sequence is preempted and the allocation retried — freeing a victim
+        always returns at least one page, so the loop terminates.  If the
+        youngest is the row being grown, it preempts itself; its resumed
+        prompt needs one page more than it just freed, which the submit-time
+        check (budget pages <= usable pages) guarantees the pool can supply
+        once it is the admission front-runner — each such cycle still moves
+        at least one generated token into the prefix, so it cannot loop
+        forever.  Returns the preempted rids.  Eager mode owns every budget
+        page up front, so this is a no-op there.
+        """
+        preempted: List[int] = []
+        for seq in sorted(self.active.values(), key=lambda s: s.birth):
+            if self.active.get(seq.slot) is not seq:
+                continue               # already preempted by an older row
+            while not self.tables.grow(seq.slot):
+                victim = max(self.active.values(), key=lambda s: s.birth)
+                self.preempt(victim)
+                preempted.append(victim.request.rid)
+                if victim is seq:
+                    break              # self-preempted: nothing left to grow
+        return preempted
+
+    def _first_live_block(self, prompt_len: int) -> int:
+        """Blocks already dead at admission under a sliding window: at the
+        first post-prefill decode the query sits at ``prompt_len``, so a
+        block whose last position ``(blk+1)·ps - 1 <= prompt_len - window``
+        is out of the window before it is ever read (the same horizon
+        ``reclaim`` uses).  Prefill attention reads the in-row activations,
+        not the cache, so those blocks' writes can go straight to trash."""
+        if not self.lazy or self.window is None:
+            return 0
+        ps = self.cfg.page_size
+        n_blocks = self.cfg.pages_for(prompt_len)
+        dead = max(0, (prompt_len - self.window + 1) // ps)
+        return min(dead, n_blocks - 1)   # the last block is always live
+
     def admit(self) -> List[ActiveSeq]:
-        """FCFS admission: free slot + full page budget, else stop."""
+        """FCFS admission: free slot + the admission page budget (full
+        lifetime when eager, prompt-only when lazy, minus any blocks a
+        sliding window already killed), else stop — arrival order is
+        preserved, and preempted requests re-enter from the front."""
         admitted = []
         free = self.tables.free_slots()
         while self.waiting and free:
             req = self.waiting[0]
             slot = free[0]
-            if not self.tables.admit(slot, req.budget_tokens):
-                break  # pool exhausted — keep arrival order, wait for evictions
+            need = req.prompt_len if self.lazy else req.budget_tokens
+            if not self.tables.admit(slot, need,
+                                     self._first_live_block(req.prompt_len)):
+                break  # pool exhausted — keep arrival order, wait for pages
             self.waiting.popleft()
             free.pop(0)
-            seq = ActiveSeq(request=req, slot=slot)
+            seq = ActiveSeq(request=req, slot=slot, birth=self._births)
+            self._births += 1
             self.active[slot] = seq
             admitted.append(seq)
         return admitted

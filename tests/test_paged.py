@@ -14,7 +14,14 @@ The load-bearing contracts:
   engine token for token — partial-state math in the fast tier, the real
   multi-device engine in a slow-tier subprocess with fake CPU devices;
 * EOS finish: a sequence that emits its eos_id is evicted immediately (pages
-  freed, decode steps saved), with the generation a prefix of the budget run.
+  freed, decode steps saved), with the generation a prefix of the budget run;
+* lazy admission (prompt-only reservation + one-page growth + youngest-row
+  preemption/re-prefill) is token-identical to eager full-budget reservation
+  under memory pressure that forces preemptions, at strictly higher pool
+  utilization;
+* sliding-window page reclamation frees only fully-out-of-window pages —
+  poisoning every freed page (and the trash page) leaves generations
+  bit-identical, so the kernels' window gate provably never reads them.
 """
 
 import dataclasses
@@ -220,6 +227,106 @@ def test_block_tables_admit_release_utilization():
         bt.admit(0, n_tokens=cfg.max_seq_len + 1)
 
 
+def test_block_tables_lazy_growth():
+    """grow() allocates exactly the next write block, idempotently, and
+    reports pool exhaustion without side effects."""
+    cfg = PagedCacheConfig(page_size=4, num_pages=5, max_batch=2,
+                           max_pages_per_seq=4)          # 4 usable pages
+    bt = BlockTables(cfg)
+    assert bt.admit(0, n_tokens=6)               # prompt-only: 2 pages
+    bt.kv_len[0] = 6
+    assert bt.append_dest_ok(0)                  # position 6 is in block 1
+    assert bt.grow(0) and bt.pages_grown == 0    # idempotent: no allocation
+    bt.kv_len[0] = 8                             # next write crosses a page
+    assert not bt.append_dest_ok(0)
+    assert bt.grow(0) and bt.pages_grown == 1
+    assert bt.append_dest_ok(0)
+    assert bt.tables[0, 2] != TRASH_PAGE
+    assert bt.admit(1, n_tokens=4)               # 1 page → pool dry
+    bt.kv_len[1] = 4
+    free_before = bt.allocator.num_free
+    assert not bt.grow(1)                        # dry: False, no side effect
+    assert bt.allocator.num_free == free_before == 0
+    bt.kv_len[0] = 11                            # last position of block 2
+    assert bt.append_dest_ok(0)
+    bt.kv_len[0] = 16                            # beyond the 4-block table
+    with pytest.raises(ValueError):
+        bt.grow(0)
+
+
+def test_block_tables_window_reclaim():
+    """reclaim_out_of_window frees exactly the blocks whose every position
+    the decode kernels' window gate masks out — never an in-window page."""
+    cfg = PagedCacheConfig(page_size=4, num_pages=10, max_batch=1,
+                           max_pages_per_seq=6)
+    bt = BlockTables(cfg)
+    assert bt.admit(0, n_tokens=20)              # blocks 0..4
+    bt.kv_len[0] = 20
+    window = 6
+    # next decode: q_pos = 20, keys allowed at positions > 14 → blocks 0..2
+    # (last positions 3, 7, 11) are dead; block 3 (last position 15) lives
+    freed = bt.reclaim_out_of_window(0, window)
+    assert len(freed) == 3 and bt.pages_reclaimed == 3
+    assert all(bt.tables[0, blk] == TRASH_PAGE for blk in range(3))
+    assert all(bt.tables[0, blk] != TRASH_PAGE for blk in (3, 4))
+    assert sorted(bt._owned[0]) == [3, 4]
+    assert bt.reclaim_out_of_window(0, window) == []   # idempotent at this L
+    u = bt.utilization()
+    assert u["allocated_tokens"] == 8.0          # 2 owned pages
+    assert u["used_tokens"] == 8.0               # tokens resident in them
+    bt.kv_len[0] = 22                            # window slides with kv_len
+    assert len(bt.reclaim_out_of_window(0, window)) == 1   # block 3 dies
+    bt.release(0)
+    assert bt.allocator.num_free == cfg.usable_pages
+    # windowed admission skips the blocks reclaim would free immediately: a
+    # resumed 20-token prompt reserves only its in-window tail (same horizon)
+    sched = Scheduler(cfg, lazy=True, window=window)
+    sched.submit(Request(rid=0, tokens=np.zeros(20, np.int32),
+                         max_new_tokens=4))
+    (seq,) = sched.admit()
+    assert sorted(sched.tables._owned[seq.slot]) == [3, 4]
+    assert all(sched.tables.tables[seq.slot, blk] == TRASH_PAGE
+               for blk in range(3))
+
+
+def test_scheduler_lazy_preempts_youngest_and_resumes():
+    """Pool runs dry mid-growth → the youngest row is preempted: pages
+    freed, request re-queued at the FRONT with generated tokens folded into
+    the prompt and the budget shrunk; admission later resumes it."""
+    cfg = PagedCacheConfig(page_size=4, num_pages=6, max_batch=2,
+                           max_pages_per_seq=4)          # 5 usable pages
+    sched = Scheduler(cfg, lazy=True)
+    sched.submit(Request(rid=0, tokens=np.arange(8, dtype=np.int32),
+                         max_new_tokens=8))
+    sched.submit(Request(rid=1, tokens=np.arange(4, dtype=np.int32),
+                         max_new_tokens=8))
+    s0, s1 = sched.admit()                       # lazy: 2 + 1 pages
+    assert sched.tables.allocator.num_free == 2
+    s0.generated, s1.generated = [11], [21]
+    sched.tables.kv_len[s0.slot], sched.tables.kv_len[s1.slot] = 8, 4
+    assert sched.ensure_growth() == []           # 2 free pages cover both
+    assert sched.tables.allocator.num_free == 0
+    s0.generated += [12, 13, 14, 15]
+    s1.generated += [22, 23, 24]
+    sched.tables.kv_len[s0.slot], sched.tables.kv_len[s1.slot] = 12, 8
+    preempted = sched.ensure_growth()            # dry → youngest (rid 1) out
+    assert preempted == [1] and sched.preemptions == 1
+    assert list(sched.active) == [s0.slot]
+    assert sched.tables.append_dest_ok(s0.slot)  # the older row kept growing
+    resumed = sched.waiting[0]                   # re-queued at the front
+    assert resumed.rid == 1
+    assert list(resumed.tokens) == list(np.arange(4)) + [21, 22, 23, 24]
+    assert resumed.max_new_tokens == 4           # 8 - 4 already generated
+    assert resumed.generated_prefix == [21, 22, 23, 24]
+    assert resumed.budget_tokens == 12           # invariant under preemption
+    # the survivor finishes → its pages cover the resumed prefix
+    s0.generated += [16, 17, 18]                 # hits the budget of 8
+    sched.evict_finished()
+    (s1b,) = sched.admit()
+    assert s1b.request.rid == 1 and s1b.request.generated_prefix == [21, 22,
+                                                                     23, 24]
+
+
 def test_prefill_dest_math():
     cfg = PagedCacheConfig(page_size=4, num_pages=9, max_batch=2,
                            max_pages_per_seq=4)
@@ -387,6 +494,85 @@ def test_packed_prefill_matches_per_prompt_prefill():
         assert max_err(lp[..., 1:, :, :], ls[..., 1:, :, :]) < 1e-5
 
 
+def test_lazy_engine_matches_eager_under_preemption():
+    """The acceptance contract of scheduler v2: with a pool tight enough to
+    force at least one preemption, the lazy engine (prompt-only admission +
+    growth + preempt/re-prefill) generates exactly the eager full-budget
+    engine's tokens, at strictly higher reserved-vs-live page utilization."""
+    from repro.models import lm
+    from repro.serving import ServingEngine
+
+    cfg = _smoke_cfg()
+    params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rs = np.random.RandomState(0)
+    reqs = [(rs.randint(0, cfg.vocab_size, size=9).astype(np.int32), 6),
+            (rs.randint(0, cfg.vocab_size, size=5).astype(np.int32), 8)]
+    # 6 usable pages: eager serves the two 4-page-budget requests serially;
+    # lazy admits both at once (3 + 2 prompt pages) and runs dry growing
+    pcfg = PagedCacheConfig(page_size=4, num_pages=7, max_batch=2,
+                            max_pages_per_seq=4)
+
+    def run(lazy):
+        eng = ServingEngine(cfg, pcfg, params, impl="xla", prefill_len=16,
+                            xla_chunk=16, lazy=lazy)
+        out, stats = eng.run(list(reqs))
+        # every page back in the pool once the queue drains
+        assert eng.scheduler.tables.allocator.num_free == pcfg.usable_pages
+        return out, stats
+
+    out_e, st_e = run(lazy=False)
+    out_l, st_l = run(lazy=True)
+    assert st_e["preemptions"] == 0 and st_e["pages_grown"] == 0
+    assert st_l["preemptions"] >= 1          # the pressure actually bit
+    assert set(out_e) == set(out_l)
+    for rid in out_e:
+        assert np.array_equal(out_l[rid], out_e[rid]), \
+            f"request {rid}: lazy {out_l[rid]} != eager {out_e[rid]}"
+    assert st_l["mean_utilization"] > st_e["mean_utilization"]
+
+
+def test_window_reclamation_poisoned_pages_inert():
+    """Sliding-window serving frees pages that slid fully out of the window.
+    Poisoning every freed page (and the trash page their table entries now
+    alias) with 1e6 must leave the generation bit-identical to a run that
+    never reclaims — i.e. reclamation never frees an in-window page and the
+    kernels' window gate never reads a reclaimed one."""
+    from repro.models import lm
+    from repro.serving import ServingEngine
+
+    cfg = dataclasses.replace(_smoke_cfg(), attn_window=10)
+    params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rs = np.random.RandomState(1)
+    reqs = [(rs.randint(0, cfg.vocab_size, size=8).astype(np.int32), 12),
+            (rs.randint(0, cfg.vocab_size, size=11).astype(np.int32), 9)]
+    # 5 usable pages vs a ~3-page window footprint per row: tight enough
+    # that lazy growth preempts, so the preempt/re-prefill path runs
+    # *combined* with reclamation (a resumed long-tail prompt re-admits
+    # with only its in-window blocks reserved)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=6, max_batch=2,
+                            max_pages_per_seq=6)
+
+    def run(**kw):
+        eng = ServingEngine(cfg, pcfg, params, impl="xla", prefill_len=24,
+                            xla_chunk=16, lazy=True, **kw)
+        out, stats = eng.run(list(reqs))
+        assert eng.scheduler.tables.allocator.num_free == pcfg.usable_pages
+        return out, stats
+
+    out_ref, st_ref = run(reclaim=False)
+    out_rec, st_rec = run(poison_reclaimed=True)
+    assert st_ref["pages_reclaimed"] == 0
+    assert st_rec["pages_reclaimed"] > 0     # long tails actually reclaimed
+    assert st_rec["preemptions"] >= 1        # ...while preemption also bites
+    for rid in out_ref:
+        assert np.array_equal(out_rec[rid], out_ref[rid]), \
+            f"request {rid}: reclaimed {out_rec[rid]} != pinned {out_ref[rid]}"
+    # reclamation holds O(window) pages per long row instead of O(seq):
+    # the pool footprint must shrink (the utilization *fraction* may not —
+    # a window straddling two partially-dead pages is sparser per page)
+    assert st_rec["mean_pool_fraction"] < st_ref["mean_pool_fraction"]
+
+
 def test_engine_eos_early_finish():
     """EOS eviction: generation is a prefix of the budget run, the decode
     loop stops spending steps on the finished sequence, and its pages return
@@ -428,8 +614,12 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 def test_sharded_engine_matches_single_device():
     """Paged serving on a 2-way ("model",) mesh — page pool sharded
     page-aligned, decode via per-shard partials + online-softmax merge —
-    reproduces the single-device engine token for token. Subprocess: the
-    fake-device XLA flag must be set before jax initialises."""
+    reproduces the single-device engine token for token, in both admission
+    modes. The lazy run uses a pool tight enough to force a preemption, so
+    growth/preempt/re-prefill exercise the sharded decode path too (block
+    tables keep global ids: every shard sees the same post-growth tables
+    each step). Subprocess: the fake-device XLA flag must be set before jax
+    initialises."""
     code = """
 import dataclasses
 import jax, jax.numpy as jnp, numpy as np
@@ -462,6 +652,20 @@ for rid in out1:
     assert np.array_equal(out1[rid], out2[rid]), \\
         f"request {rid}: sharded {out2[rid]} != single-device {out1[rid]}"
 assert eng2.scheduler.tables.allocator.num_free == pcfg2.usable_pages
+
+# lazy + sharded: 6-page pool → 4 usable across 2 shards; growth runs the
+# pool dry and preempts, all against the sharded decode/prefill steps
+pcfg3 = PagedCacheConfig(page_size=8, num_pages=6, max_batch=2,
+                         max_pages_per_seq=3, num_shards=2)
+eng3 = ServingEngine(cfg, pcfg3, params, impl="xla", prefill_len=24,
+                     xla_chunk=16, mesh=mesh, lazy=True)
+out3, stats3 = eng3.run(list(reqs))
+assert stats3["preemptions"] >= 1, stats3
+assert stats3["pages_grown"] >= 1, stats3
+for rid in out1:
+    assert np.array_equal(out1[rid], out3[rid]), \\
+        f"request {rid}: sharded-lazy {out3[rid]} != eager {out1[rid]}"
+assert eng3.scheduler.tables.allocator.num_free == pcfg3.usable_pages
 print("PASS")
 """
     env = dict(os.environ)

@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Docs drift guard (CI `docs` job; run locally with `python tools/check_docs.py`).
 
-Three cheap checks that catch the usual ways docs rot:
+Four cheap checks that catch the usual ways docs rot:
 
 1. every relative markdown link in README.md and docs/*.md resolves to a file
    or directory in the repo (anchors and external URLs are skipped);
@@ -10,13 +10,19 @@ Three cheap checks that catch the usual ways docs rot:
 3. every ``*.md`` file referenced from Python source (docstrings/comments —
    e.g. "see docs/serving.md") exists in the repo, so code cannot keep
    pointing readers at deleted design notes (the seed's docstrings cited two
-   long-gone design/experiment logs for two PRs).
+   long-gone design/experiment logs for two PRs);
+4. docstring coverage over the packages whose behaviour the docs narrate in
+   detail (``serving/``, ``kernels/``): every public module, public top-level
+   function/class and public method must carry a docstring — an undocumented
+   entry point there is exactly the drift the scheduling/kernels docs would
+   silently diverge around.
 
 Exit code 0 = clean; 1 = drift, with one line per problem.
 """
 
 from __future__ import annotations
 
+import ast
 import re
 import sys
 from pathlib import Path
@@ -95,9 +101,68 @@ def check_py_doc_refs() -> list:
     return problems
 
 
+# packages with doc pages narrating their internals — keep the code
+# self-describing so the narration has something stable to point at
+DOCSTRING_PKGS = ("src/repro/serving", "src/repro/kernels")
+
+
+def _missing_docstrings(tree: ast.Module, relpath: str) -> list:
+    """Public defs in one parsed module that lack a docstring.
+
+    Public = name without a leading underscore; for classes the check
+    recurses one level into public methods (``__init__`` counts as private —
+    dataclasses and trivial constructors are described by the class).
+    """
+    name = Path(relpath).name
+    public_module = name == "__init__.py" or not name.startswith("_")
+    problems = []
+    if public_module and ast.get_docstring(tree) is None:
+        problems.append(f"{relpath}:1: public module has no docstring")
+
+    def visit(node, prefix=""):
+        for child in node.body:
+            if not isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.ClassDef)):
+                continue
+            if child.name.startswith("_"):
+                continue
+            kind = "class" if isinstance(child, ast.ClassDef) else "function"
+            if ast.get_docstring(child) is None:
+                problems.append(
+                    f"{relpath}:{child.lineno}: public {kind} "
+                    f"'{prefix}{child.name}' has no docstring")
+            if isinstance(child, ast.ClassDef):
+                visit(child, prefix=f"{child.name}.")
+
+    visit(tree)
+    return problems
+
+
+def check_docstring_coverage() -> list:
+    """Every public module/function/class/method in DOCSTRING_PKGS has a
+    docstring (private names and non-Python files are skipped)."""
+    problems = []
+    for pkg in DOCSTRING_PKGS:
+        base = ROOT / pkg
+        if not base.is_dir():
+            problems.append(f"{pkg}: package missing")
+            continue
+        for py in sorted(base.rglob("*.py")):
+            if "__pycache__" in py.parts:
+                continue
+            rel = str(py.relative_to(ROOT))
+            try:
+                tree = ast.parse(py.read_text())
+            except SyntaxError as e:
+                problems.append(f"{rel}: unparsable ({e})")
+                continue
+            problems.extend(_missing_docstrings(tree, rel))
+    return problems
+
+
 def main() -> int:
     problems = (check_links() + check_architecture_coverage()
-                + check_py_doc_refs())
+                + check_py_doc_refs() + check_docstring_coverage())
     for p in problems:
         print(p)
     print(f"check_docs: {'FAIL' if problems else 'ok'} "
