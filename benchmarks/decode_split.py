@@ -1,0 +1,158 @@
+"""Split-KV flash-decode sweep: splits × batch × kv_len → BENCH_decode.json.
+
+The perf trajectory of the split-KV work (kernels/decode.py): for every
+(mode, batch, kv_len, num_splits) cell, time one jitted decode call, check it
+against the unsplit result (f32-merge tolerance), and pair the measurement
+with the perf/autotune.py cost-model prediction for the same launch — the
+machine-readable JSON is the artifact CI and later PRs diff against.
+
+On this CPU container the wall-clocks are XLA-CPU timings of the *algorithm*
+(the split partial states + vectorized merge really execute); the TPU-side
+winner is predicted by the cost model, which the autotuner tests pin.
+
+  PYTHONPATH=src python benchmarks/decode_split.py                  # full sweep
+  PYTHONPATH=src python benchmarks/decode_split.py --smoke          # CI guard
+  PYTHONPATH=src python benchmarks/decode_split.py --impl pallas_interpret
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from common import row, time_fn
+from repro.core.attention import spark_decode, spark_paged_decode
+from repro.perf.autotune import DecodeShape, predict_time
+
+
+def _contig_case(key, b, hq, hkv, kv_len, d):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, hq, d))
+    k = jax.random.normal(ks[1], (b, hkv, kv_len, d))
+    v = jax.random.normal(ks[2], (b, hkv, kv_len, d))
+    # ragged tail: last row half-full, exercising the kv_len skip under splits
+    kv = np.full((b,), kv_len, np.int32)
+    kv[-1] = max(1, kv_len // 2)
+    return q, k, v, jnp.asarray(kv)
+
+
+def _paged_case(key, b, hq, hkv, kv_len, d, page_size):
+    t = -(-kv_len // page_size)
+    num_pages = 1 + b * t
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, hq, d))
+    kp = jax.random.normal(ks[1], (hkv, num_pages, page_size, d))
+    vp = jax.random.normal(ks[2], (hkv, num_pages, page_size, d))
+    perm = np.random.RandomState(0).permutation(num_pages - 1) + 1
+    bt = jnp.asarray(perm[:b * t].reshape(b, t), jnp.int32)
+    kv = np.full((b,), kv_len, np.int32)
+    kv[-1] = max(1, kv_len // 2)
+    return q, kp, vp, bt, jnp.asarray(kv)
+
+
+def sweep(args):
+    """Run the sweep; returns the list of per-cell result records."""
+    b_list = [int(x) for x in args.batch.split(",")]
+    kv_list = [int(x) for x in args.kv_len.split(",")]
+    splits = [int(x) for x in args.splits.split(",")]
+    hq, hkv, d = args.heads, args.kv_heads, args.head_dim
+    key = jax.random.PRNGKey(0)
+    results = []
+    for mode in ("contig", "paged"):
+        for b in b_list:
+            for kv_len in kv_list:
+                if mode == "contig":
+                    q, k, v, kvl = _contig_case(key, b, hq, hkv, kv_len, d)
+
+                    def call(ns):
+                        return jax.jit(lambda q_, k_, v_, l_: spark_decode(
+                            q_, k_, v_, impl=args.impl, kv_len=l_,
+                            block_kv=args.block_kv, num_splits=ns)
+                        ), (q, k, v, kvl)
+                    shape = DecodeShape(batch=b, hkv=hkv, group=hq // hkv,
+                                        kv_len=kv_len, head_dim=d,
+                                        dtype_bytes=4)
+                    block = args.block_kv
+                else:
+                    q, kp, vp, bt, kvl = _paged_case(key, b, hq, hkv, kv_len,
+                                                     d, args.page_size)
+
+                    def call(ns):
+                        return jax.jit(lambda q_, kp_, vp_, bt_, l_:
+                                       spark_paged_decode(
+                                           q_, kp_, vp_, bt_, l_,
+                                           impl=args.impl, num_splits=ns)
+                        ), (q, kp, vp, bt, kvl)
+                    shape = DecodeShape(batch=b, hkv=hkv, group=hq // hkv,
+                                        kv_len=kv_len, head_dim=d,
+                                        page_size=args.page_size,
+                                        dtype_bytes=4)
+                    block = args.page_size
+                fn1, inputs = call(1)
+                base = np.asarray(fn1(*inputs), np.float32)
+                for ns in splits:
+                    fn, inputs = call(ns)
+                    out = np.asarray(fn(*inputs), np.float32)
+                    err = float(np.abs(out - base).max())
+                    us = time_fn(fn, *inputs, iters=args.iters,
+                                 warmup=args.warmup)
+                    pred = predict_time(shape, ns, block)
+                    rec = {"mode": mode, "batch": b, "kv_len": kv_len,
+                           "num_splits": ns, "block_kv": block, "us": us,
+                           "predicted_tpu_us": pred * 1e6,
+                           "max_err_vs_unsplit": err}
+                    results.append(rec)
+                    row(f"decode_{mode}_b{b}_kv{kv_len}_ns{ns}", us,
+                        f"pred_tpu_us={pred*1e6:.2f} err={err:.2e}")
+                    assert err < 2e-5, \
+                        f"split decode diverged: {rec}"
+    return results
+
+
+def main(argv=None):
+    """CLI entry point; writes the JSON artifact next to returning 0."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--splits", default="1,2,4,8")
+    ap.add_argument("--batch", default="1,4")
+    ap.add_argument("--kv-len", default="1024,8192")
+    ap.add_argument("--heads", type=int, default=8)
+    ap.add_argument("--kv-heads", type=int, default=2)
+    ap.add_argument("--head-dim", type=int, default=64)
+    ap.add_argument("--page-size", type=int, default=64)
+    ap.add_argument("--block-kv", type=int, default=256,
+                    help="contiguous-mode KV block")
+    ap.add_argument("--impl", default="xla",
+                    choices=["xla", "pallas", "pallas_interpret"])
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--warmup", type=int, default=2)
+    ap.add_argument("--out", default="BENCH_decode.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI guard: 2 batches × 1 kv_len × 2 splits")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.batch, args.kv_len, args.splits = "1,2", "256", "1,2"
+        args.page_size, args.block_kv = 32, 64
+        args.iters, args.warmup = 2, 1
+
+    results = sweep(args)
+    payload = {
+        "bench": "decode_split",
+        "impl": args.impl,
+        "heads": args.heads, "kv_heads": args.kv_heads,
+        "head_dim": args.head_dim,
+        "smoke": bool(args.smoke),
+        "results": results,
+    }
+    out = Path(args.out)
+    out.write_text(json.dumps(payload, indent=1, sort_keys=True))
+    json.loads(out.read_text())            # artifact must round-trip
+    print(f"wrote {out} ({len(results)} cells)")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,7 @@ These tiny functions are the single source of truth used by:
   * the Pallas kernels (per kv-block update),
   * the pure-XLA chunked fallback (lax.scan carry),
   * the distributed flash-decode merge (cross-device partial combine),
+  * the split-KV decode finalize (``merge_many`` over the splits axis),
   * the hypothesis property tests (associativity / shift invariance).
 """
 
@@ -69,6 +70,28 @@ def merge(s1: SoftmaxState, s2: SoftmaxState) -> SoftmaxState:
         m=m,
         l=s1.l * a1 + s2.l * a2,
         acc=s1.acc * a1[..., None] + s2.acc * a2[..., None],
+    )
+
+
+def merge_many(state: SoftmaxState, axis: int = 0) -> SoftmaxState:
+    """Vectorized merge of N disjoint-block states stacked along ``axis``.
+
+    The N-way form of :func:`merge` in one shot (one max + one exp-rescaled
+    sum over the stacked axis) — used to combine split-KV decode partials.
+    Because :func:`merge` is associative and commutative (the property tests
+    fuzz it), this equals any pairwise merge order. ``axis`` indexes ``m``/
+    ``l``; ``acc`` carries one extra trailing feature dim. All-empty stacks
+    (every ``m == NEG_INF``) come out as the empty state, NaN-free, because
+    NEG_INF is a large *finite* negative.
+    """
+    if axis < 0:
+        axis += state.m.ndim
+    m = jnp.max(state.m, axis=axis)
+    a = jnp.exp(state.m - jnp.expand_dims(m, axis))
+    return SoftmaxState(
+        m=m,
+        l=jnp.sum(state.l * a, axis=axis),
+        acc=jnp.sum(state.acc * a[..., None], axis=axis),
     )
 
 

@@ -132,12 +132,14 @@ def scatter_pages_sharded(pages, dest, vals, *, mesh: Mesh,
 def paged_decode_sharded(q, k_pages, v_pages, block_tables, kv_len, *,
                          mesh: Mesh, axis: str = POOL_AXIS, impl: str = "xla",
                          window: Optional[int] = None,
-                         scale: Optional[float] = None):
+                         scale: Optional[float] = None, num_splits: int = 1):
     """Sharded paged decode, no append: the distributed counterpart of
     ``spark_paged_decode`` (q replicated, pool page-sharded over ``axis``,
     global block tables). Benchmark/tooling entry point — the serving step
     uses :func:`paged_append_decode_sharded`, which also writes the new
-    token's K/V."""
+    token's K/V. ``num_splits`` applies split-KV *within* each shard: the
+    shard-local splits merge locally, then the cross-shard merge below — the
+    same associative algebra at two nesting levels."""
     from repro.distributed import shard_map
     n_local = pages_per_shard(k_pages.shape[1], pool_shard_count(mesh, axis))
 
@@ -146,7 +148,7 @@ def paged_decode_sharded(q, k_pages, v_pages, block_tables, kv_len, *,
         bt_local, valid = _local_ids(bt, n_local, shard)
         acc, m, l = spark_paged_decode_partials(
             q_l, kp, vp, bt_local, kvl, block_valid=valid, impl=impl,
-            window=window, scale=scale)
+            window=window, scale=scale, num_splits=num_splits)
         return merge_partials(acc, m, l, axis, out_dtype=q_l.dtype)
 
     return shard_map(local, mesh=mesh,
@@ -160,7 +162,8 @@ def paged_append_decode_sharded(q, k_new, v_new, k_pages, v_pages,
                                 block_tables, kv_len, *, mesh: Mesh,
                                 axis: str = POOL_AXIS, impl: str = "xla",
                                 window: Optional[int] = None,
-                                scale: Optional[float] = None):
+                                scale: Optional[float] = None,
+                                num_splits: int = 1):
     """One sharded paged-decode step: append this token's K/V, then attend.
 
     q/k_new/v_new [B, H(kv), D] (replicated activations — the decode rules
@@ -169,8 +172,10 @@ def paged_append_decode_sharded(q, k_new, v_new, k_pages, v_pages,
     ``axis``; block_tables [B, T] global ids; kv_len [B] pre-append lengths.
 
     Returns (o [B, Hq, D], new_k_pages, new_v_pages) — o replicated, pools
-    still sharded. Inside: per-shard local scatter + local partial attention,
-    merged with tiny all-reduces (module docstring).
+    still sharded. Inside: per-shard local scatter + local partial attention
+    (optionally split-KV within the shard via ``num_splits`` — shard-local
+    splits merge locally, then cross-shard), merged with tiny all-reduces
+    (module docstring).
     """
     from repro.distributed import shard_map
     n_shards = pool_shard_count(mesh, axis)
@@ -188,7 +193,7 @@ def paged_append_decode_sharded(q, k_new, v_new, k_pages, v_pages,
         bt_local, valid = _local_ids(bt, n_local, shard)
         acc, m, l = spark_paged_decode_partials(
             q_l, kp, vp, bt_local, kvl + 1, block_valid=valid, impl=impl,
-            window=window, scale=scale)
+            window=window, scale=scale, num_splits=num_splits)
         o = merge_partials(acc, m, l, axis, out_dtype=q_l.dtype)
         return o, kp, vp
 

@@ -14,6 +14,20 @@ the TPU analogue of the paper packing multiple MMA computations per warp.
 Ragged batches: ``kv_len [B]`` (scalar-prefetch) masks each row's valid cache
 length, and fully-out-of-range KV blocks are skipped with ``pl.when``.
 
+Split-KV (``num_splits > 1``): the sequential online-softmax loop over KV
+blocks exposes only ``B·Hkv`` parallel work items — at serving shapes (small
+continuous-batching batches, very long caches) that leaves most of the chip
+idle.  The grid gains a *splits* axis: split ``s`` folds its contiguous slice
+of KV blocks into its own un-normalised ``(acc, m, l)`` state (the same
+partial-state trick the distributed path uses per shard), and a tiny
+vectorized ``online_softmax.merge_many`` + ``finalize`` combines the splits —
+``B·Hkv·num_splits`` parallel items for one extra O(B·Hq·D) merge pass.
+``perf/autotune.py`` picks ``(num_splits, block_kv)`` from a cost model.
+
+One kernel body (:func:`_decode_body`) serves every variant — contiguous,
+paged, finalized or partial-state — parameterized by the scalar-prefetch
+wrappers below; the fold itself is ``kernels.common.online_fold``.
+
 Paged variant (:func:`flash_paged_decode`): the KV cache is a pool of
 fixed-size pages ``[Hkv, num_pages, page_size, D]`` shared by all sequences;
 each row's scalar-prefetched *block table* ``[B, T]`` names the physical page
@@ -35,134 +49,282 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import online_softmax as osm
 from repro.core.online_softmax import NEG_INF
+from repro.kernels.common import LANES, mosaic_kwargs, online_fold
 
-LANES = 128
-
-
-def _online_block(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, kv_start,
-                  kv_len, q_pos, *, scale, window, acc_dtype):
-    """Fold one KV block into the (m, l, acc) scratch state (paper Eq. 2)."""
-    q = q_ref[0, 0]                            # [G, D]
-    k = k_ref[0, 0]                            # [bkv, D]
-    v = v_ref[0, 0]
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=acc_dtype)
-    s = s.astype(jnp.float32) * scale          # [G, bkv]
-    kp = kv_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    allowed = kp < kv_len
-    if window is not None:
-        allowed &= kp > q_pos - window
-    s = jnp.where(allowed, s, NEG_INF)
-
-    m_prev = m_ref[:, 0]
-    l_prev = l_ref[:, 0]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new[:, None])
-    l_ref[...] = jnp.broadcast_to((l_prev * alpha + jnp.sum(p, axis=1))[:, None],
-                                  l_ref.shape)
-    m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
-    pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-                             preferred_element_type=acc_dtype)
-    acc_ref[...] = acc_ref[...] * alpha[:, None] + pv.astype(jnp.float32)
+# grid axes of every decode kernel: (batch, kv_head, split, kv-block-in-split)
+_DECODE_SEMANTICS = ("parallel", "parallel", "parallel", "arbitrary")
 
 
-def _decode_kernel(kv_len_ref,                    # scalar prefetch [B]
-                   q_ref, k_ref, v_ref,           # inputs
-                   o_ref,                         # output
-                   acc_ref, m_ref, l_ref,         # scratch
-                   *, scale: float, window: Optional[int], block_kv: int,
-                   acc_dtype):
-    b, hk, ik = (pl.program_id(i) for i in range(3))
-    nk = pl.num_programs(2)
+def _decode_body(kv_len_ref, valid_ref, q_ref, k_ref, v_ref, rest, *,
+                 scale: float, window: Optional[int], block_kv: int,
+                 num_blocks: Optional[int], acc_dtype, finalize: bool):
+    """The one decode loop body behind every kernel variant.
+
+    Grid is always ``(B, Hkv, num_splits, blocks_per_split)``: program (b, h,
+    s, j) folds global KV block ``ik = s·blocks_per_split + j`` into the
+    (m, l, acc) scratch carried across the sequential ``j`` axis.  With
+    ``finalize`` the last ``j`` writes the normalised output (valid only for
+    ``num_splits == 1``); otherwise each split writes its raw state triple,
+    merged by the caller (``online_softmax.merge_many``) — the same algebra
+    the distributed path uses across shards.
+
+    ``valid_ref [B, T]`` (optional) gates blocks the caller does not own
+    (distributed pool shards); ``num_blocks`` gates trailing blocks past the
+    real block count when the split layout over-covers (paged tables whose
+    width does not divide by the split count).
+    """
+    *outs, acc_ref, m_ref, l_ref = rest
+    b = pl.program_id(0)
+    j = pl.program_id(3)
+    nj = pl.num_programs(3)
+    ik = pl.program_id(2) * nj + j                 # global KV block index
     kv_start = ik * block_kv
     kv_len = kv_len_ref[b]                         # valid cache length, this row
     q_pos = kv_len - 1                             # the query token's position
 
-    @pl.when(ik == 0)
+    @pl.when(j == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
     needed = kv_start < kv_len
+    if num_blocks is not None:
+        needed &= ik < num_blocks
+    if valid_ref is not None:
+        # clamp like the block-table index map: over-cover cells (ik >=
+        # num_blocks) are compute-gated above but still evaluate this read
+        needed &= valid_ref[b, jnp.minimum(ik, num_blocks - 1)] != 0
     if window is not None:
         needed &= kv_start + block_kv - 1 > q_pos - window
 
     @pl.when(needed)
     def _compute():
-        _online_block(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, kv_start,
-                      kv_len, q_pos, scale=scale, window=window,
-                      acc_dtype=acc_dtype)
+        q = q_ref[0, 0]                            # [G, D]
+        k = k_ref[0, 0]                            # [bkv, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=acc_dtype)
+        s = s.astype(jnp.float32) * scale          # [G, bkv]
+        kp = kv_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        allowed = kp < kv_len
+        if window is not None:
+            allowed &= kp > q_pos - window
+        s = jnp.where(allowed, s, NEG_INF)
+        online_fold(s, v_ref[0, 0], acc_ref, m_ref, l_ref, acc_dtype=acc_dtype)
 
-    @pl.when(ik == nk - 1)
+    @pl.when(j == nj - 1)
     def _write():
-        l = l_ref[:, 0]
-        l_safe = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+        if finalize:
+            (o_ref,) = outs
+            l = l_ref[:, 0]
+            l_safe = jnp.where(l == 0.0, 1.0, l)
+            o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+        else:
+            acc_out, m_out, l_out = outs
+            acc_out[0, 0, 0] = acc_ref[...].astype(acc_out.dtype)
+            m_out[0, 0, 0] = m_ref[...].astype(m_out.dtype)
+            l_out[0, 0, 0] = l_ref[...].astype(l_out.dtype)
 
 
-def _paged_decode_kernel(kv_len_ref, bt_ref, *rest, **kw):
-    # The block table is consumed entirely by the K/V BlockSpec index maps;
+def _contig_kernel(kv_len_ref, q_ref, k_ref, v_ref, *rest, **kw):
+    # contiguous cache: kv_len is the only scalar-prefetch operand
+    _decode_body(kv_len_ref, None, q_ref, k_ref, v_ref, rest, **kw)
+
+
+def _paged_kernel(kv_len_ref, bt_ref, q_ref, k_ref, v_ref, *rest, **kw):
+    # the block table is consumed entirely by the K/V BlockSpec index maps;
     # inside the body the gathered page is indistinguishable from a contiguous
-    # cache block, so the online-softmax loop is shared with _decode_kernel.
+    # cache block, so the loop is shared with the contiguous kernel
     del bt_ref
-    _decode_kernel(kv_len_ref, *rest, **kw)
+    _decode_body(kv_len_ref, None, q_ref, k_ref, v_ref, rest, **kw)
 
 
-def _paged_partial_kernel(kv_len_ref, bt_ref, valid_ref,  # scalar prefetch
-                          q_ref, k_ref, v_ref,            # inputs
-                          acc_out_ref, m_out_ref, l_out_ref,   # outputs
-                          acc_ref, m_ref, l_ref,          # scratch
-                          *, scale: float, window: Optional[int],
-                          block_kv: int, acc_dtype):
-    """Partial-state paged decode: like _paged_decode_kernel, but (a) blocks
-    whose ``valid_ref[b, ik] == 0`` are skipped entirely (the distributed path
-    marks non-local table entries invalid; they point at the local trash page)
-    and (b) the un-normalised (acc, m, l) state is written out instead of
-    ``acc / l`` — the caller merges states across shards (online_softmax.merge)
-    and finalizes once."""
+def _paged_valid_kernel(kv_len_ref, bt_ref, valid_ref, q_ref, k_ref, v_ref,
+                        *rest, **kw):
+    # blocks with valid_ref[b, ik] == 0 are skipped entirely: the distributed
+    # path marks non-local table entries invalid (they point at the local
+    # trash page)
     del bt_ref
-    b, hk, ik = (pl.program_id(i) for i in range(3))
-    nk = pl.num_programs(2)
-    kv_start = ik * block_kv
-    kv_len = kv_len_ref[b]
-    q_pos = kv_len - 1
+    _decode_body(kv_len_ref, valid_ref, q_ref, k_ref, v_ref, rest, **kw)
 
-    @pl.when(ik == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
 
-    needed = (kv_start < kv_len) & (valid_ref[b, ik] != 0)
-    if window is not None:
-        needed &= kv_start + block_kv - 1 > q_pos - window
+def _group_pad(q, b, hkv, group, d):
+    """[B, Hq, D] → [B, Hkv, G_pad, D] with G padded up to the 8-row MXU tile."""
+    qg = q.reshape(b, hkv, group, d)
+    g_pad = max(8, group)
+    if g_pad != group:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad - group), (0, 0)))
+    return qg, g_pad
 
-    @pl.when(needed)
-    def _compute():
-        _online_block(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, kv_start,
-                      kv_len, q_pos, scale=scale, window=window,
-                      acc_dtype=acc_dtype)
 
-    @pl.when(ik == nk - 1)
-    def _write():
-        acc_out_ref[0, 0] = acc_ref[...].astype(acc_out_ref.dtype)
-        m_out_ref[0, 0] = m_ref[...].astype(m_out_ref.dtype)
-        l_out_ref[0, 0] = l_ref[...].astype(l_out_ref.dtype)
+def _decode_out_shapes(b, hkv, ns, g_pad, d, out_dtype, finalize: bool):
+    """(out_shape, out_specs) for the finalized / partial kernel variants.
+
+    The index maps absorb trailing scalar-prefetch refs with ``*_``; partial
+    outputs carry the splits axis so every (b, h, split) cell writes its own
+    state block.
+    """
+    def _ix(b_, h, s_, j, *_):
+        return (b_, h, 0, 0)
+
+    def _ix_split(b_, h, s_, j, *_):
+        return (b_, h, s_, 0, 0)
+
+    if finalize:
+        return (jax.ShapeDtypeStruct((b, hkv, g_pad, d), out_dtype),
+                pl.BlockSpec((1, 1, g_pad, d), _ix))
+    out_shape = [jax.ShapeDtypeStruct((b, hkv, ns, g_pad, d), jnp.float32),
+                 jax.ShapeDtypeStruct((b, hkv, ns, g_pad, LANES), jnp.float32),
+                 jax.ShapeDtypeStruct((b, hkv, ns, g_pad, LANES), jnp.float32)]
+    out_specs = [pl.BlockSpec((1, 1, 1, g_pad, d), _ix_split),
+                 pl.BlockSpec((1, 1, 1, g_pad, LANES), _ix_split),
+                 pl.BlockSpec((1, 1, 1, g_pad, LANES), _ix_split)]
+    return out_shape, out_specs
+
+
+def _split_states(acc, m, l, group, b, hq):
+    """Kernel partial outputs → a SoftmaxState stacked on the splits axis.
+
+    acc [B,Hkv,ns,G_pad,D], m/l [B,Hkv,ns,G_pad,LANES] → state with
+    m/l [B,ns,Hq] and acc [B,ns,Hq,D] (splits axis 1, ready for merge_many).
+    """
+    ns, d = acc.shape[2], acc.shape[-1]
+    acc = acc[:, :, :, :group].transpose(0, 2, 1, 3, 4).reshape(b, ns, hq, d)
+    m = m[:, :, :, :group, 0].transpose(0, 2, 1, 3).reshape(b, ns, hq)
+    l = l[:, :, :, :group, 0].transpose(0, 2, 1, 3).reshape(b, ns, hq)
+    return osm.SoftmaxState(m=m, l=l, acc=acc)
+
+
+def flash_decode(q, k, v, *, kv_len=None, window: Optional[int] = None,
+                 scale: Optional[float] = None, acc_dtype=jnp.float32,
+                 block_kv: int = 512, num_splits: int = 1,
+                 interpret: bool = False):
+    """q: [B, Hq, D]; k/v: [B, Hkv, S, D]; kv_len: [B] int32 (default: full S).
+
+    num_splits > 1 partitions the KV axis across that many parallel grid
+    cells, each producing an un-normalised partial state, merged in f32 by
+    ``online_softmax.merge_many`` (module docstring). Returns o: [B, Hq, D]
+    in q.dtype.
+    """
+    b, hq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    if kv_len is None:
+        kv_len = jnp.full((b,), skv, jnp.int32)
+
+    # clamp the block to the cache length, but keep KV tiles 8-row aligned:
+    # a short cache (skv < 8) must not produce a sub-8-row tile — pad instead
+    block_kv = min(block_kv, max(skv, 8))
+    block_kv = -(-block_kv // 8) * 8
+    nk = pl.cdiv(skv, block_kv)
+    num_splits = max(1, min(num_splits, nk))
+    nj = pl.cdiv(nk, num_splits)                   # KV blocks per split
+    skv_pad = nk * block_kv                        # remainder pad only —
+    if skv_pad != skv:                             # split over-cover cells
+        pad = ((0, 0), (0, 0), (0, skv_pad - skv), (0, 0))  # (ik >= nk) are
+        k = jnp.pad(k, pad)                        # compute-gated + index-
+        v = jnp.pad(v, pad)                        # clamped, no data needed
+
+    qg, g_pad = _group_pad(q, b, hkv, group, d)
+    finalize = num_splits == 1
+
+    def _kv_ix(b_, h, s_, j, *_):
+        return (b_, h, jnp.minimum(s_ * nj + j, nk - 1), 0)
+
+    kernel = functools.partial(_contig_kernel, scale=scale, window=window,
+                               block_kv=block_kv, num_blocks=nk,
+                               acc_dtype=acc_dtype, finalize=finalize)
+    out_shape, out_specs = _decode_out_shapes(
+        b, hkv, num_splits, g_pad, d, q.dtype, finalize)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hkv, num_splits, nj),
+        in_specs=[
+            pl.BlockSpec((1, 1, g_pad, d),
+                         lambda b_, h, s_, j, *_: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), _kv_ix),
+            pl.BlockSpec((1, 1, block_kv, d), _kv_ix),
+        ],
+        out_specs=out_specs,
+        scratch_shapes=[pltpu.VMEM((g_pad, d), jnp.float32),
+                        pltpu.VMEM((g_pad, LANES), jnp.float32),
+                        pltpu.VMEM((g_pad, LANES), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+        **mosaic_kwargs(interpret, _DECODE_SEMANTICS),
+    )(kv_len.astype(jnp.int32), qg, k, v)
+    if finalize:
+        return out[:, :, :group].reshape(b, hq, d)
+    state = osm.merge_many(_split_states(*out, group, b, hq), axis=1)
+    o, _ = osm.finalize(state, out_dtype=q.dtype)
+    return o
+
+
+def _paged_call(kernel_fn, prefetch, qg, k_pages, v_pages, *, b, hkv, ns, nj,
+                t, g_pad, d, page_size, out_dtype, finalize, scale, window,
+                acc_dtype, interpret):
+    """Shared pallas_call launch for the paged variants (finalized/partial).
+
+    ``prefetch`` is the scalar-prefetch tuple starting with (kv_len,
+    block_tables[, block_valid]); the K/V index maps read the table at the
+    global block index ``s·nj + j`` (clamped — trailing cells past the table
+    width are compute-gated by ``num_blocks``).
+    """
+    n_pre = len(prefetch)
+
+    def _kv_ix(b_, h, s_, j, kvl, bt, *_):
+        ik = jnp.minimum(s_ * nj + j, t - 1)
+        return (h, bt[b_, ik], 0, 0)
+
+    kernel = functools.partial(kernel_fn, scale=scale, window=window,
+                               block_kv=page_size, num_blocks=t,
+                               acc_dtype=acc_dtype, finalize=finalize)
+    out_shape, out_specs = _decode_out_shapes(
+        b, hkv, ns, g_pad, d, out_dtype, finalize)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=n_pre,
+        grid=(b, hkv, ns, nj),
+        in_specs=[
+            pl.BlockSpec((1, 1, g_pad, d),
+                         lambda b_, h, s_, j, *_: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, d), _kv_ix),
+            pl.BlockSpec((1, 1, page_size, d), _kv_ix),
+        ],
+        out_specs=out_specs,
+        scratch_shapes=[pltpu.VMEM((g_pad, d), jnp.float32),
+                        pltpu.VMEM((g_pad, LANES), jnp.float32),
+                        pltpu.VMEM((g_pad, LANES), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+        **mosaic_kwargs(interpret, _DECODE_SEMANTICS),
+    )(*prefetch, qg, k_pages, v_pages)
 
 
 def flash_paged_decode(q, k_pages, v_pages, block_tables, kv_len, *,
                        window: Optional[int] = None,
                        scale: Optional[float] = None, acc_dtype=jnp.float32,
-                       interpret: bool = False):
+                       num_splits: int = 1, interpret: bool = False):
     """Flash-decode against a paged KV cache.
 
     q: [B, Hq, D]; k_pages/v_pages: [Hkv, num_pages, page_size, D] (global page
     pool); block_tables: [B, T] int32 physical page ids per logical KV block
     (entries past a row's allocation must still be valid ids — use the pool's
-    trash page 0); kv_len: [B] int32 valid cache length per row.
+    trash page 0); kv_len: [B] int32 valid cache length per row. num_splits
+    partitions the table width T across parallel grid cells (module
+    docstring).
 
     Returns o: [B, Hq, D] in q.dtype.
     """
@@ -172,53 +334,28 @@ def flash_paged_decode(q, k_pages, v_pages, block_tables, kv_len, *,
     group = hq // hkv
     scale = (d ** -0.5) if scale is None else scale
     t = block_tables.shape[1]
+    num_splits = max(1, min(num_splits, t))
+    nj = pl.cdiv(t, num_splits)
+    qg, g_pad = _group_pad(q, b, hkv, group, d)
+    finalize = num_splits == 1
 
-    qg = q.reshape(b, hkv, group, d)
-    g_pad = max(8, group)
-    if g_pad != group:
-        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad - group), (0, 0)))
-
-    kernel = functools.partial(_paged_decode_kernel, scale=scale, window=window,
-                               block_kv=page_size, acc_dtype=acc_dtype)
-    kwargs = {}
-    if not interpret:
-        kwargs["compiler_params"] = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"))
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(b, hkv, t),
-        in_specs=[
-            pl.BlockSpec((1, 1, g_pad, d), lambda b_, h, ik, kvl, bt: (b_, h, 0, 0)),
-            # the paged gather: logical block ik of row b lives in physical
-            # page bt[b, ik] — scalar-prefetched, so the DMA address is known
-            # before the body runs (same pattern as the kv_len ragged skip)
-            pl.BlockSpec((1, 1, page_size, d),
-                         lambda b_, h, ik, kvl, bt: (h, bt[b_, ik], 0, 0)),
-            pl.BlockSpec((1, 1, page_size, d),
-                         lambda b_, h, ik, kvl, bt: (h, bt[b_, ik], 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, g_pad, d),
-                               lambda b_, h, ik, kvl, bt: (b_, h, 0, 0)),
-        scratch_shapes=[pltpu.VMEM((g_pad, d), jnp.float32),
-                        pltpu.VMEM((g_pad, LANES), jnp.float32),
-                        pltpu.VMEM((g_pad, LANES), jnp.float32)],
-    )
-    o = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, hkv, g_pad, d), q.dtype),
-        interpret=interpret,
-        **kwargs,
-    )(kv_len.astype(jnp.int32), block_tables.astype(jnp.int32), qg,
-      k_pages, v_pages)
-    return o[:, :, :group].reshape(b, hq, d)
+    prefetch = (kv_len.astype(jnp.int32), block_tables.astype(jnp.int32))
+    out = _paged_call(_paged_kernel, prefetch, qg, k_pages, v_pages,
+                      b=b, hkv=hkv, ns=num_splits, nj=nj, t=t, g_pad=g_pad,
+                      d=d, page_size=page_size, out_dtype=q.dtype,
+                      finalize=finalize, scale=scale, window=window,
+                      acc_dtype=acc_dtype, interpret=interpret)
+    if finalize:
+        return out[:, :, :group].reshape(b, hq, d)
+    state = osm.merge_many(_split_states(*out, group, b, hq), axis=1)
+    o, _ = osm.finalize(state, out_dtype=q.dtype)
+    return o
 
 
 def flash_paged_decode_partials(q, k_pages, v_pages, block_tables, kv_len, *,
                                 block_valid=None, window: Optional[int] = None,
                                 scale: Optional[float] = None,
-                                acc_dtype=jnp.float32,
+                                acc_dtype=jnp.float32, num_splits: int = 1,
                                 interpret: bool = False):
     """Paged flash-decode returning the un-finalized online-softmax state.
 
@@ -229,6 +366,9 @@ def flash_paged_decode_partials(q, k_pages, v_pages, block_tables, kv_len, *,
     ``(acc [B,Hq,D], m [B,Hq], l [B,Hq])`` for ``online_softmax.merge`` /
     ``finalize`` — shards of a page-sharded pool each compute their local
     state, then a tiny all-reduce merges them (distributed paged serving).
+    With ``num_splits > 1`` the shard-local splits are merged locally first
+    (``merge_many``), composing with the cross-shard merge — the returned
+    triple is identical either way.
     """
     b, hq, d = q.shape
     hkv, _, page_size, _ = k_pages.shape
@@ -236,112 +376,19 @@ def flash_paged_decode_partials(q, k_pages, v_pages, block_tables, kv_len, *,
     group = hq // hkv
     scale = (d ** -0.5) if scale is None else scale
     t = block_tables.shape[1]
+    num_splits = max(1, min(num_splits, t))
+    nj = pl.cdiv(t, num_splits)
     if block_valid is None:
         block_valid = jnp.ones((b, t), jnp.int32)
+    qg, g_pad = _group_pad(q, b, hkv, group, d)
 
-    qg = q.reshape(b, hkv, group, d)
-    g_pad = max(8, group)
-    if g_pad != group:
-        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad - group), (0, 0)))
-
-    kernel = functools.partial(_paged_partial_kernel, scale=scale,
-                               window=window, block_kv=page_size,
-                               acc_dtype=acc_dtype)
-    kwargs = {}
-    if not interpret:
-        kwargs["compiler_params"] = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"))
-
-    out_spec = pl.BlockSpec((1, 1, g_pad, d),
-                            lambda b_, h, ik, kvl, bt, bv: (b_, h, 0, 0))
-    stat_spec = pl.BlockSpec((1, 1, g_pad, LANES),
-                             lambda b_, h, ik, kvl, bt, bv: (b_, h, 0, 0))
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=(b, hkv, t),
-        in_specs=[
-            pl.BlockSpec((1, 1, g_pad, d),
-                         lambda b_, h, ik, kvl, bt, bv: (b_, h, 0, 0)),
-            pl.BlockSpec((1, 1, page_size, d),
-                         lambda b_, h, ik, kvl, bt, bv: (h, bt[b_, ik], 0, 0)),
-            pl.BlockSpec((1, 1, page_size, d),
-                         lambda b_, h, ik, kvl, bt, bv: (h, bt[b_, ik], 0, 0)),
-        ],
-        out_specs=[out_spec, stat_spec, stat_spec],
-        scratch_shapes=[pltpu.VMEM((g_pad, d), jnp.float32),
-                        pltpu.VMEM((g_pad, LANES), jnp.float32),
-                        pltpu.VMEM((g_pad, LANES), jnp.float32)],
-    )
-    acc, m, l = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=[jax.ShapeDtypeStruct((b, hkv, g_pad, d), jnp.float32),
-                   jax.ShapeDtypeStruct((b, hkv, g_pad, LANES), jnp.float32),
-                   jax.ShapeDtypeStruct((b, hkv, g_pad, LANES), jnp.float32)],
-        interpret=interpret,
-        **kwargs,
-    )(kv_len.astype(jnp.int32), block_tables.astype(jnp.int32),
-      block_valid.astype(jnp.int32), qg, k_pages, v_pages)
-    acc = acc[:, :, :group].reshape(b, hq, d)
-    m = m[:, :, :group, 0].reshape(b, hq)
-    l = l[:, :, :group, 0].reshape(b, hq)
-    return acc, m, l
-
-
-def flash_decode(q, k, v, *, kv_len=None, window: Optional[int] = None,
-                 scale: Optional[float] = None, acc_dtype=jnp.float32,
-                 block_kv: int = 512, interpret: bool = False):
-    """q: [B, Hq, D]; k/v: [B, Hkv, S, D]; kv_len: [B] int32 (default: full S).
-
-    Returns o: [B, Hq, D] in q.dtype.
-    """
-    b, hq, d = q.shape
-    _, hkv, skv, _ = k.shape
-    assert hq % hkv == 0
-    group = hq // hkv
-    scale = (d ** -0.5) if scale is None else scale
-    if kv_len is None:
-        kv_len = jnp.full((b,), skv, jnp.int32)
-
-    block_kv = min(block_kv, skv)
-    skv_pad = pl.cdiv(skv, block_kv) * block_kv
-    if skv_pad != skv:
-        pad = ((0, 0), (0, 0), (0, skv_pad - skv), (0, 0))
-        k = jnp.pad(k, pad)
-        v = jnp.pad(v, pad)
-    nk = skv_pad // block_kv
-
-    # group q heads by kv head: [B, Hkv, G, D], pad G up to the 8-row MXU tile
-    qg = q.reshape(b, hkv, group, d)
-    g_pad = max(8, group)
-    if g_pad != group:
-        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad - group), (0, 0)))
-
-    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
-                               block_kv=block_kv, acc_dtype=acc_dtype)
-    kwargs = {}
-    if not interpret:
-        kwargs["compiler_params"] = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"))
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(b, hkv, nk),
-        in_specs=[
-            pl.BlockSpec((1, 1, g_pad, d), lambda b_, h, ik, _: (b_, h, 0, 0)),
-            pl.BlockSpec((1, 1, block_kv, d), lambda b_, h, ik, _: (b_, h, ik, 0)),
-            pl.BlockSpec((1, 1, block_kv, d), lambda b_, h, ik, _: (b_, h, ik, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, g_pad, d), lambda b_, h, ik, _: (b_, h, 0, 0)),
-        scratch_shapes=[pltpu.VMEM((g_pad, d), jnp.float32),
-                        pltpu.VMEM((g_pad, LANES), jnp.float32),
-                        pltpu.VMEM((g_pad, LANES), jnp.float32)],
-    )
-    o = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, hkv, g_pad, d), q.dtype),
-        interpret=interpret,
-        **kwargs,
-    )(kv_len.astype(jnp.int32), qg, k, v)
-    return o[:, :, :group].reshape(b, hq, d)
+    prefetch = (kv_len.astype(jnp.int32), block_tables.astype(jnp.int32),
+                block_valid.astype(jnp.int32))
+    acc, m, l = _paged_call(_paged_valid_kernel, prefetch, qg, k_pages,
+                            v_pages, b=b, hkv=hkv, ns=num_splits, nj=nj, t=t,
+                            g_pad=g_pad, d=d, page_size=page_size,
+                            out_dtype=jnp.float32, finalize=False,
+                            scale=scale, window=window, acc_dtype=acc_dtype,
+                            interpret=interpret)
+    state = osm.merge_many(_split_states(acc, m, l, group, b, hq), axis=1)
+    return state.acc, state.m, state.l

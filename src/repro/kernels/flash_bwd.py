@@ -37,6 +37,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.online_softmax import NEG_INF
 from repro.kernels import rng
+from repro.kernels.common import mosaic_kwargs
 from repro.kernels.flash_fwd import _pad_segments
 
 
@@ -261,10 +262,8 @@ def flash_bwd(q, k, v, o, lse, do, *, causal: bool = False,
                            lambda b_, h, i, j, *_: (b_, h // group, i, 0))
     row_spec = pl.BlockSpec((1, 1, block_q), lambda b_, h, i, j, *_: (b_, h, j))
 
-    kwargs = {}
-    if not interpret:
-        kwargs["compiler_params"] = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"))
+    kwargs = mosaic_kwargs(
+        interpret, ("parallel", "parallel", "parallel", "arbitrary"))
 
     seed = jnp.atleast_1d(jnp.asarray(dropout_seed, jnp.int32))
     prefetch = (seed,)

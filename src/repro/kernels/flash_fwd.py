@@ -40,8 +40,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.online_softmax import NEG_INF
 from repro.kernels import rng
-
-LANES = 128  # TPU vector lane width; (rows, LANES) f32 scratch for m/l state
+from repro.kernels.common import LANES, mosaic_kwargs, online_fold
 
 
 def _fwd_kernel(*refs, scale: float, causal: bool, window: Optional[int],
@@ -109,29 +108,17 @@ def _fwd_kernel(*refs, scale: float, causal: bool, window: Optional[int],
         if allowed is not None:
             s = jnp.where(allowed, s, NEG_INF)
 
-        # ---- online softmax update (paper Eq. 3) ----
-        m_prev = m_ref[:, 0]                                # [bq]
-        l_prev = l_ref[:, 0]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-        alpha = jnp.exp(m_prev - m_new)                     # rescale factor
-        # rows that have only ever seen masked scores keep m == NEG_INF; there
-        # exp(s - m) would be exp(0) = 1 — substitute 0 so l stays 0 and the
-        # finalize l==0 path emits zeros (fully-masked rows, e.g. packed pad).
-        m_safe = jnp.where(m_new == NEG_INF, 0.0, m_new)
-        p = jnp.exp(s - m_safe[:, None])                    # [bq, bkv] f32
-        l_new = l_prev * alpha + jnp.sum(p, axis=1)
-        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
-        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
-
+        # ---- online softmax update (paper Eq. 3): the shared fold, with
+        # dropout hooked between the l update (pre-dropout probabilities,
+        # matching the reference softmax) and the P·V matmul ----
+        p_transform = None
         if dropout_rate > 0.0:
-            keep = rng.dropout_keep_mask(dropout_rate, seed_ref[0], b, h, qp, kp)
-            p = jnp.where(keep, p / (1.0 - dropout_rate), 0.0)
-
-        # Second matmul (P·V): P downcast to the input dtype for the MXU —
-        # the paper's layout transform converts MMA-C to MMA-A layout here.
-        pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-                                 preferred_element_type=acc_dtype)
-        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv.astype(jnp.float32)
+            def p_transform(p):
+                keep = rng.dropout_keep_mask(dropout_rate, seed_ref[0], b, h,
+                                             qp, kp)
+                return jnp.where(keep, p / (1.0 - dropout_rate), 0.0)
+        online_fold(s, v, acc_ref, m_ref, l_ref, acc_dtype=acc_dtype,
+                    p_transform=p_transform)
 
     @pl.when(ik == nk - 1)
     def _finalize():
@@ -202,10 +189,8 @@ def flash_fwd(q, k, v, *, causal: bool = False, window: Optional[int] = None,
         sq_real=sq_real, skv_real=skv_real, acc_dtype=acc_dtype,
         segments=segments)
 
-    kwargs = {}
-    if not interpret:
-        kwargs["compiler_params"] = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"))
+    kwargs = mosaic_kwargs(
+        interpret, ("parallel", "parallel", "parallel", "arbitrary"))
 
     seed = jnp.atleast_1d(jnp.asarray(dropout_seed, jnp.int32))
     in_specs = [

@@ -114,37 +114,47 @@ def mha_xla(q, k, v, *, seed=0, segment_ids=None,
 
 
 def decode(q, k, v, *, kv_len=None, window=None, scale=None,
-           block_kv: int = 512, interpret: bool = False):
-    """Single-token flash-decode. q: [B, Hq, D], k/v: [B, Hkv, S, D]."""
+           block_kv: int = 512, num_splits: int = 1, interpret: bool = False):
+    """Single-token flash-decode. q: [B, Hq, D], k/v: [B, Hkv, S, D].
+
+    ``num_splits > 1`` partitions the KV axis over parallel grid cells whose
+    partial states merge in f32 (split-KV; see kernels/decode.py and
+    perf/autotune.py for the launch-parameter choice).
+    """
     return flash_decode(q, k, v, kv_len=kv_len, window=window, scale=scale,
-                        block_kv=block_kv, interpret=interpret)
+                        block_kv=block_kv, num_splits=num_splits,
+                        interpret=interpret)
 
 
 def paged_decode(q, k_pages, v_pages, block_tables, kv_len, *, window=None,
-                 scale=None, interpret: bool = False):
+                 scale=None, num_splits: int = 1, interpret: bool = False):
     """Single-token flash-decode over a paged KV cache.
 
     q: [B, Hq, D]; k_pages/v_pages: [Hkv, num_pages, page_size, D];
     block_tables: [B, T] int32 (trash-page ids past each row's allocation);
-    kv_len: [B] int32.
+    kv_len: [B] int32. ``num_splits`` splits the table width (see ``decode``).
     """
     return flash_paged_decode(q, k_pages, v_pages, block_tables, kv_len,
-                              window=window, scale=scale, interpret=interpret)
+                              window=window, scale=scale,
+                              num_splits=num_splits, interpret=interpret)
 
 
 def paged_decode_partials(q, k_pages, v_pages, block_tables, kv_len, *,
                           block_valid=None, window=None, scale=None,
-                          interpret: bool = False):
+                          num_splits: int = 1, interpret: bool = False):
     """Paged flash-decode stopping at the (acc, m, l) online-softmax state.
 
     ``block_valid [B, T]`` (0/1) gates table entries — a shard of a
     page-sharded pool passes its locality mask so non-local entries (remapped
     to the local trash page) are skipped. States from different shards merge
     with ``online_softmax.merge`` and finalize once (distributed serving).
+    ``num_splits`` splits shard-locally first; the returned triple is
+    identical either way, so it composes with the cross-shard merge.
     """
     return flash_paged_decode_partials(q, k_pages, v_pages, block_tables,
                                        kv_len, block_valid=block_valid,
                                        window=window, scale=scale,
+                                       num_splits=num_splits,
                                        interpret=interpret)
 
 

@@ -60,6 +60,14 @@ def main(argv=None):
     ap.add_argument("--num-pages", type=int, default=0,
                     help="--paged: override the page-pool size (0 = auto; "
                          "shrink it to watch --lazy preempt)")
+    ap.add_argument("--num-splits", type=int, default=0,
+                    help="split-KV decode: parallel KV partitions per "
+                         "(batch, kv-head) row (0 = 1, or autotuned with "
+                         "--autotune)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="pick --num-splits from the perf/autotune.py cost "
+                         "model (persistent cache; explicit --num-splits "
+                         "wins)")
     args = ap.parse_args(argv)
 
     cfg = (configs.smoke_config(args.arch) if args.smoke
@@ -73,8 +81,21 @@ def main(argv=None):
         return serve_paged(cfg, args, mesh)
 
     max_len = args.prompt_len + args.gen
+    num_splits, block_kv = args.num_splits or 1, 128   # Ctx.block_kv default
+    if args.autotune and not args.num_splits:
+        from repro.perf.autotune import DecodeShape, plan_decode_persistent
+        shape = DecodeShape(batch=args.batch, hkv=cfg.num_kv_heads,
+                            group=cfg.num_heads // cfg.num_kv_heads,
+                            kv_len=max_len, head_dim=cfg.head_dim,
+                            dtype_bytes=jnp.dtype(cfg.dtype).itemsize)
+        plan = plan_decode_persistent(shape)
+        num_splits, block_kv = plan.num_splits, plan.block_kv
+        print(f"autotune: num_splits={plan.num_splits} "
+              f"block_kv={plan.block_kv} ({plan.source}, "
+              f"predicted {plan.time_s*1e6:.1f}us/layer)")
     arts = make_serve_steps(cfg, mesh=mesh, impl=args.impl, max_len=max_len,
-                            batch=args.batch,
+                            batch=args.batch, num_splits=num_splits,
+                            block_kv=block_kv,
                             xla_chunk=min(1024, args.prompt_len))
 
     from repro.models import lm
@@ -133,7 +154,13 @@ def serve_paged(cfg, args, mesh=None):
     if args.lazy:
         prefill_len = max(prefill_len, budget)
     eng = ServingEngine(cfg, pcfg, params, impl=args.impl, mesh=mesh,
-                        prefill_len=prefill_len, lazy=args.lazy)
+                        prefill_len=prefill_len, lazy=args.lazy,
+                        num_splits=args.num_splits or None,
+                        autotune=args.autotune)
+    if args.autotune or args.num_splits:
+        print(f"decode num_splits: {eng.num_splits}"
+              + (" (autotuned)" if args.autotune and not args.num_splits
+                 else ""))
     reqs = []
     for _ in range(args.requests):  # ragged: 25%..100% of the nominal lengths
         plen = int(rs.randint(max(1, args.prompt_len // 4), args.prompt_len + 1))

@@ -34,6 +34,9 @@ class Ctx:
     decode_write: str = "dus"        # KV write: "dus" | "onehot" (see below)
     block_q: int = 128
     block_kv: int = 128
+    num_splits: int = 1              # split-KV decode grid cells per (B,Hkv)
+                                     # row (kernels/decode.py; chosen by
+                                     # perf/autotune.py when serving opts in)
     acc_dtype: Any = jnp.float32
     bwd_acc_dtype: Any = jnp.float32
     mesh: Any = None                 # set by the paged serving steps when the
@@ -228,7 +231,8 @@ def apply_attention(p, x, ctx: Ctx, cfg, *, positions=None, cache=None,
                     q[:, :, 0, :], k[:, :, 0, :], v[:, :, 0, :],
                     cache["k_pages"], cache["v_pages"], bt, kvl,
                     mesh=ctx.mesh, impl=ctx.impl,
-                    window=paged_decode_window(cfg))
+                    window=paged_decode_window(cfg),
+                    num_splits=ctx.num_splits)
                 o = o[:, :, None, :]
             else:
                 ps = cache["k_pages"].shape[2]
@@ -245,7 +249,8 @@ def apply_attention(p, x, ctx: Ctx, cfg, *, positions=None, cache=None,
                 # same window gate skips without reading)
                 o = spark_paged_decode(q[:, :, 0, :], ck, cv, bt, kvl + 1,
                                        impl=ctx.impl,
-                                       window=paged_decode_window(cfg)
+                                       window=paged_decode_window(cfg),
+                                       num_splits=ctx.num_splits
                                        )[:, :, None, :]
             new_cache = {"k_pages": ck, "v_pages": cv}
             o = ctx.c(o, "batch", "heads", "seq_full", "head_dim")
@@ -272,7 +277,8 @@ def apply_attention(p, x, ctx: Ctx, cfg, *, positions=None, cache=None,
         cv = ctx.c(cv, "batch", "kv_heads", "kv_cache_seq", "head_dim")
         kv_len = jnp.full((b,), jnp.minimum(idx + 1, cap), jnp.int32)
         o = spark_decode(q[:, :, 0, :], ck, cv, impl=ctx.impl, kv_len=kv_len,
-                         window=None, block_kv=ctx.block_kv)
+                         window=None, block_kv=ctx.block_kv,
+                         num_splits=ctx.num_splits)
         o = o[:, :, None, :]
         new_cache = {"k": ck, "v": cv, "index": idx + 1}
     else:

@@ -1,6 +1,16 @@
+"""Performance models: HBM-traffic accounting (paper §2.3), the three-term
+roofline, compiled-HLO collective parsing, and split-KV decode launch
+autotuning (perf/autotune.py — cost model + persistent plan cache)."""
+
+from repro.perf.autotune import (AutotuneCache, DecodeShape, LaunchPlan,
+                                 plan_decode, plan_decode_persistent,
+                                 predict_time)
 from repro.perf.hlo_analysis import CollectiveStats, collective_stats
 from repro.perf.roofline import (HBM_BW, HBM_PER_CHIP, ICI_LINK_BW, PEAK_FLOPS,
                                  Roofline, build, model_flops_for)
 
-__all__ = ["CollectiveStats", "collective_stats", "HBM_BW", "HBM_PER_CHIP",
-           "ICI_LINK_BW", "PEAK_FLOPS", "Roofline", "build", "model_flops_for"]
+__all__ = ["AutotuneCache", "CollectiveStats", "DecodeShape", "LaunchPlan",
+           "collective_stats", "plan_decode", "plan_decode_persistent",
+           "predict_time",
+           "HBM_BW", "HBM_PER_CHIP", "ICI_LINK_BW", "PEAK_FLOPS", "Roofline",
+           "build", "model_flops_for"]

@@ -41,6 +41,7 @@ _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
 
 @dataclasses.dataclass
 class CollectiveStats:
+    """Collective traffic parsed from one compiled-HLO text dump."""
     bytes_by_kind: Dict[str, float]
     count_by_kind: Dict[str, int]
     total_bytes: float
@@ -73,6 +74,11 @@ def _group_size(line: str, default: int) -> int:
 
 def collective_stats(hlo_text: str, *, default_group: int = 1,
                      skip_done: bool = True) -> CollectiveStats:
+    """Scan HLO text for collective ops and total their ring-algorithm bytes.
+
+    Async pairs count once (the ``-start`` op); replica-group sizes come from
+    the op's ``replica_groups`` attribute, falling back to ``default_group``.
+    """
     bytes_by_kind: Dict[str, float] = defaultdict(float)
     count_by_kind: Dict[str, int] = defaultdict(int)
     ops = []

@@ -38,6 +38,7 @@ def _div(n: int, by: int, divisible_required: bool = True) -> float:
 
 @dataclasses.dataclass
 class Traffic:
+    """Compulsory HBM bytes for one step, broken down by tensor family."""
     weights: float = 0.0
     optimizer: float = 0.0
     activations: float = 0.0
@@ -46,10 +47,12 @@ class Traffic:
 
     @property
     def total(self) -> float:
+        """Sum of every traffic family (the roofline memory numerator)."""
         return (self.weights + self.optimizer + self.activations
                 + self.logits + self.cache)
 
     def as_dict(self):
+        """Flat dict form (artifact/JSON friendly), including the total."""
         return {"weights": self.weights, "optimizer": self.optimizer,
                 "activations": self.activations, "logits": self.logits,
                 "cache": self.cache, "total": self.total}
@@ -106,6 +109,7 @@ def _layer_act_bytes(cfg, kind: str, tokens_local: float, tp: int,
 
 
 def train_traffic(cfg, shape, *, dp: int, tp: int, fsdp: bool) -> Traffic:
+    """Per-device compulsory bytes for one train step (module docstring)."""
     t = Traffic()
     tokens_local = shape.global_batch * shape.seq_len / dp
     storage_shards = tp * (dp if fsdp else 1)
@@ -134,6 +138,7 @@ def train_traffic(cfg, shape, *, dp: int, tp: int, fsdp: bool) -> Traffic:
 
 
 def prefill_traffic(cfg, shape, *, dp: int, tp: int) -> Traffic:
+    """Per-device compulsory bytes for one prefill pass (incl. cache write)."""
     t = Traffic()
     tokens_local = shape.global_batch * shape.seq_len / dp
     period = len(cfg.block_pattern)
@@ -238,6 +243,7 @@ def storage_for(cfg, shape, *, dp: int, tp: int, fsdp: bool) -> dict:
 
 
 def traffic_for(cfg, shape, *, dp: int, tp: int, fsdp: bool) -> Traffic:
+    """Dispatch to the train/prefill/decode traffic model by shape.kind."""
     if shape.kind == "train":
         return train_traffic(cfg, shape, dp=dp, tp=tp, fsdp=fsdp)
     if shape.kind == "prefill":

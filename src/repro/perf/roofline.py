@@ -22,6 +22,7 @@ HBM_PER_CHIP = 16e9        # v5e HBM capacity
 
 @dataclasses.dataclass
 class Roofline:
+    """One cell's three-term roofline plus the inputs it was built from."""
     compute_s: float
     memory_s: float
     collective_s: float
@@ -34,6 +35,7 @@ class Roofline:
 
     @property
     def bound(self) -> str:
+        """Which of the three terms dominates ("compute"/"memory"/"collective")."""
         terms = {"compute": self.compute_s, "memory": self.memory_s,
                  "collective": self.collective_s}
         return max(terms, key=terms.get)
@@ -45,6 +47,7 @@ class Roofline:
 
     @property
     def useful_compute_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs — exposes remat/dispatch waste."""
         total = self.hlo_flops_per_dev * self.chips
         return self.model_flops / total if total else 0.0
 
@@ -57,6 +60,7 @@ class Roofline:
         return self.model_flops / (self.chips * PEAK_FLOPS * t)
 
     def as_dict(self) -> Dict:
+        """Flat dict form for the dry-run/benchmark JSON artifacts."""
         return {
             "compute_s": self.compute_s, "memory_s": self.memory_s,
             "collective_s": self.collective_s, "bound": self.bound,
@@ -88,6 +92,7 @@ def model_flops_for(cfg, shape, *, step_kind: str) -> float:
 def build(cfg, shape, *, step_kind: str, chips: int, hlo_flops_per_dev: float,
           hlo_bytes_per_dev: float, coll_bytes_per_dev: float,
           mem_bytes_model: float = 0.0) -> Roofline:
+    """Assemble a Roofline from dry-run artifacts (module docstring terms)."""
     mem = mem_bytes_model if mem_bytes_model > 0 else hlo_bytes_per_dev
     return Roofline(
         compute_s=hlo_flops_per_dev / PEAK_FLOPS,

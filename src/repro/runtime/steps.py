@@ -30,11 +30,13 @@ from repro.optim.schedule import cosine_schedule
 def _make_ctx(cfg, rules: Optional[ShardingRules], impl: str, seed,
               deterministic: bool, decode: bool = False,
               xla_chunk: int = 1024, xla_unroll: bool = False,
-              decode_write: str = "dus", mesh=None) -> Ctx:
+              decode_write: str = "dus", mesh=None,
+              num_splits: int = 1, block_kv: int = 128) -> Ctx:
     return Ctx(constrain=rules.constrain if rules is not None else None,
                impl=impl, deterministic=deterministic, seed=seed,
                decode=decode, xla_chunk=xla_chunk, xla_unroll=xla_unroll,
-               decode_write=decode_write, mesh=mesh)
+               decode_write=decode_write, mesh=mesh, num_splits=num_splits,
+               block_kv=block_kv)
 
 
 @dataclasses.dataclass
@@ -146,6 +148,7 @@ def make_serve_steps(cfg, *, mesh=None, impl: str = "xla", max_len: int = 2048,
                      batch: int = 1, xla_chunk: int = 1024,
                      xla_unroll: bool = False,
                      decode_write: str = "dus",
+                     num_splits: int = 1, block_kv: int = 128,
                      paged=None) -> ServeArtifacts:
     """paged: optional serving.PagedCacheConfig — switches the cache to a
     global page pool with block-table decode and segment-aware packed
@@ -156,6 +159,11 @@ def make_serve_steps(cfg, *, mesh=None, impl: str = "xla", max_len: int = 2048,
           → (logits [B,S,Vpad], caches)     # packed prompts, B prefill rows
       decode_fn(params, token, caches, block_tables, kv_len)
           → (logits [B,Vpad], caches)       # B = paged.max_batch slots
+
+    num_splits / block_kv: split-KV launch parameters for the decode step
+    (static — baked into the jitted step; pick both with perf/autotune.py or
+    let ``ServingEngine(autotune=True)`` do it). The paged decode ignores
+    ``block_kv`` — its KV block is pinned to the page size.
     """
     if paged is not None:
         # distributed pool: the page dim shards over the mesh's model axis
@@ -194,7 +202,8 @@ def make_serve_steps(cfg, *, mesh=None, impl: str = "xla", max_len: int = 2048,
 
         def decode_fn(params, token, caches, block_tables, kv_len):
             ctx = _make_ctx(cfg, rules_dec, impl, 0, True, xla_chunk=xla_chunk,
-                            decode_write=decode_write, mesh=mesh)
+                            decode_write=decode_write, mesh=mesh,
+                            num_splits=num_splits)
             return lm.paged_decode_step(cfg, params, ctx, token, caches,
                                         block_tables, kv_len)
 
@@ -226,7 +235,8 @@ def make_serve_steps(cfg, *, mesh=None, impl: str = "xla", max_len: int = 2048,
 
     def decode_fn(params, token, caches, position):
         ctx = _make_ctx(cfg, rules_dec, impl, 0, True, xla_chunk=xla_chunk,
-                        decode_write=decode_write)
+                        decode_write=decode_write, num_splits=num_splits,
+                        block_kv=block_kv)
         return lm.decode_step(cfg, params, ctx, token, caches, position)
 
     if mesh is not None:

@@ -54,14 +54,19 @@ class ServingEngine:
                  xla_chunk: int = 1024, mesh=None,
                  eos_id: Optional[int] = None, lazy: bool = False,
                  reclaim: Optional[bool] = None,
-                 poison_reclaimed: bool = False):
+                 poison_reclaimed: bool = False,
+                 num_splits: Optional[int] = None, autotune: bool = False):
         """lazy: admission policy (module docstring). reclaim: free
         fully-out-of-window pages each step — defaults to "whenever the arch
         has a sliding window"; pass False to pin pages for a model's whole
         residency (the pre-reclamation behaviour, kept for A/B tests).
         poison_reclaimed: test hook — overwrite freed pages and the trash
         page with a huge constant, so any kernel read of a reclaimed page
-        corrupts the output instead of passing silently."""
+        corrupts the output instead of passing silently.
+        num_splits: split-KV decode grid cells per (batch, kv-head) — baked
+        into the jitted decode step (default 1). autotune: pick num_splits
+        from the perf/autotune.py cost model for this engine's geometry,
+        through its persistent cache (an explicit num_splits wins)."""
         assert cfg.causal, "serving needs an autoregressive arch"
         self.cfg = cfg
         self.pcfg = paged_cfg
@@ -74,7 +79,11 @@ class ServingEngine:
             raise ValueError("page reclamation needs a sliding-window arch "
                              "(cfg.attn_window is None)")
         self.poison_reclaimed = poison_reclaimed
+        if num_splits is None:
+            num_splits = self._autotuned_splits() if autotune else 1
+        self.num_splits = num_splits
         arts = make_serve_steps(cfg, mesh=mesh, impl=impl, paged=paged_cfg,
+                                num_splits=num_splits,
                                 xla_chunk=min(xla_chunk, self.prefill_len))
         if mesh is not None and arts.rules is not None:
             # lay the params out per the serve rules (specs are structural —
@@ -97,6 +106,27 @@ class ServingEngine:
         self.util_samples: List[float] = []
         self.pool_samples: List[float] = []      # allocated / usable pages
         self._next_rid = 0
+
+    def _autotuned_splits(self) -> int:
+        """Pick the decode step's split count from the autotune cost model.
+
+        The jitted step needs a *static* num_splits, so the plan targets the
+        worst-case geometry this engine can see: every slot active at its
+        full block-table reach. Plans memoise in the persistent autotune
+        cache (``perf/autotune.py``), keyed by this exact geometry.
+        """
+        import jax.numpy as jnp_
+
+        from repro.perf.autotune import DecodeShape, plan_decode_persistent
+        shape = DecodeShape(
+            batch=self.pcfg.max_batch,
+            hkv=self.cfg.num_kv_heads,
+            group=self.cfg.num_heads // self.cfg.num_kv_heads,
+            kv_len=self.pcfg.max_pages_per_seq * self.pcfg.page_size,
+            head_dim=self.cfg.head_dim,
+            page_size=self.pcfg.page_size,
+            dtype_bytes=jnp_.dtype(self.cfg.dtype).itemsize)
+        return plan_decode_persistent(shape).num_splits
 
     # -- request intake ----------------------------------------------------
     def submit(self, tokens, max_new_tokens: int, rid: Optional[int] = None,

@@ -121,6 +121,40 @@ def check_merge_is_order_invariant(data):
     np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-4)
 
 
+def check_vectorized_merge_matches_pairwise(data):
+    """merge_many over a stacked axis == any pairwise merge order == the full
+    softmax (associativity is what licenses the split-KV decode finalize)."""
+    s, v, cols = data
+    rows, total = s.shape
+    d = v.shape[1]
+    n = total // cols
+    states = []
+    for i in range(n):
+        st_i = osm.init_state((rows,), d)
+        st_i = osm.update(st_i, jnp.asarray(s[:, i * cols:(i + 1) * cols]),
+                          jnp.asarray(v[i * cols:(i + 1) * cols]))
+        states.append(st_i)
+    stacked = osm.SoftmaxState(m=jnp.stack([x.m for x in states]),
+                               l=jnp.stack([x.l for x in states]),
+                               acc=jnp.stack([x.acc for x in states]))
+    o_vec, lse_vec = osm.finalize(osm.merge_many(stacked, axis=0))
+    pair = states[0]
+    for st_i in states[1:]:
+        pair = osm.merge(pair, st_i)
+    o_pair, lse_pair = osm.finalize(pair)
+    np.testing.assert_allclose(np.asarray(o_vec), np.asarray(o_pair),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(lse_vec), np.asarray(lse_pair),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(o_vec), _softmax_weighted(s, v),
+                               atol=1e-4, rtol=1e-4)
+    # an all-empty stack merges to the empty state, NaN-free
+    empty = osm.init_state((n, rows), d)
+    o_e, lse_e = osm.finalize(osm.merge_many(empty, axis=0))
+    assert float(jnp.abs(o_e).max()) == 0.0
+    assert not bool(jnp.isnan(lse_e).any())
+
+
 def check_shift_invariance(shift, data):
     """softmax(s + c) == softmax(s): the max-subtraction must absorb shifts."""
     s, v, cols = data
@@ -171,6 +205,11 @@ def test_merge_is_order_invariant(data):
     check_merge_is_order_invariant(data)
 
 
+@given(score_blocks())
+def test_vectorized_merge_matches_pairwise(data):
+    check_vectorized_merge_matches_pairwise(data)
+
+
 @given(st.floats(-50, 50), score_blocks())
 def test_shift_invariance(shift, data):
     check_shift_invariance(shift, data)
@@ -197,6 +236,7 @@ def test_det_softmax_state_invariants(case):
     data = _case(*case)
     check_blocked_equals_full_softmax(data)
     check_merge_is_order_invariant(data)
+    check_vectorized_merge_matches_pairwise(data)
     check_shift_invariance(17.5, data)
     check_shift_invariance(-3.25, data)
 

@@ -1,0 +1,244 @@
+"""Split-KV flash decode: split ≡ unsplit on every path, plus edge cases.
+
+The contracts behind ``num_splits`` (kernels/decode.py module docstring):
+
+* partitioning the KV axis over parallel grid cells and merging the partial
+  ``(acc, m, l)`` states in f32 changes nothing but the reduction order —
+  split output ≡ unsplit output to f32-merge tolerance on the contiguous
+  kernel, the paged kernel, the XLA fallback, GQA/MQA grouping, sliding
+  windows and ragged ``kv_len`` (including fully-empty rows and empty splits);
+* the partial-state variant composes: shard-local splits merge locally and
+  the merged triple is identical, so the distributed cross-shard merge is
+  oblivious to the split count;
+* the serving engine with a split decode step generates token-identical
+  output (the split choice is a launch parameter, not a semantic);
+* the small-``skv`` alignment fix: caches shorter than one 8-row KV tile pad
+  instead of producing sub-8-row tiles.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import max_err
+from repro.core.attention import spark_decode, spark_paged_decode
+from repro.kernels.ops import (decode, decode_reference, paged_decode,
+                               paged_decode_partials, paged_decode_reference)
+
+TOL = 2e-5  # f32 merge tolerance (same bound the unsplit kernel tests use)
+
+
+def _mk(key, b, hq, hkv, skv, d):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, hq, d))
+    k = jax.random.normal(ks[1], (b, hkv, skv, d))
+    v = jax.random.normal(ks[2], (b, hkv, skv, d))
+    return q, k, v
+
+
+def _mk_pool(key, b, hq, hkv, d, page_size, pages_per_row):
+    num_pages = 1 + b * pages_per_row + 2
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, hq, d))
+    k_pages = jax.random.normal(ks[1], (hkv, num_pages, page_size, d))
+    v_pages = jax.random.normal(ks[2], (hkv, num_pages, page_size, d))
+    perm = np.random.RandomState(7).permutation(num_pages - 1) + 1
+    bt = jnp.asarray(perm[:b * pages_per_row].reshape(b, pages_per_row),
+                     jnp.int32)
+    return q, k_pages, v_pages, bt
+
+
+# ---------------------------------------------------------------------------
+# contiguous kernel
+# ---------------------------------------------------------------------------
+
+CONTIG_CASES = [
+    # hq, hkv, skv, d, window, block_kv, num_splits
+    (4, 4, 512, 64, None, 128, 2),       # MHA, even split
+    (8, 2, 512, 64, None, 128, 4),       # GQA group in the MXU rows
+    (4, 1, 384, 64, None, 64, 3),        # MQA, odd split of 6 blocks
+    (4, 2, 512, 64, 200, 128, 4),        # sliding window across splits
+    (4, 4, 300, 64, None, 128, 2),       # non-divisible cache length
+    (4, 2, 512, 64, None, 128, 16),      # more splits than some rows need
+]
+
+
+@pytest.mark.parametrize("case", CONTIG_CASES, ids=[str(c) for c in CONTIG_CASES])
+def test_contig_split_matches_unsplit(rng_key, case):
+    hq, hkv, skv, d, window, block, ns = case
+    b = 3
+    q, k, v = _mk(rng_key, b, hq, hkv, skv, d)
+    kv_len = jnp.array([skv, skv // 2 + 1, 5], jnp.int32)  # ragged incl. tiny
+    o1 = decode(q, k, v, kv_len=kv_len, window=window, block_kv=block,
+                interpret=True)
+    o2 = decode(q, k, v, kv_len=kv_len, window=window, block_kv=block,
+                num_splits=ns, interpret=True)
+    assert max_err(o1, o2) < TOL
+    o_ref = decode_reference(q, k, v, kv_len=np.asarray(kv_len),
+                             window=window)
+    assert max_err(o2, o_ref) < TOL
+
+
+def test_contig_split_xla_matches_kernel(rng_key):
+    """The XLA fallback's split path ≡ the split kernel ≡ unsplit."""
+    b, hq, hkv, skv, d = 2, 8, 2, 320, 64
+    q, k, v = _mk(rng_key, b, hq, hkv, skv, d)
+    kv_len = jnp.array([skv, 100], jnp.int32)
+    o_unsplit = spark_decode(q, k, v, impl="xla", kv_len=kv_len)
+    for ns in (2, 3, 5):
+        o_x = spark_decode(q, k, v, impl="xla", kv_len=kv_len, num_splits=ns)
+        assert max_err(o_unsplit, o_x) < TOL, f"xla num_splits={ns}"
+    o_k = spark_decode(q, k, v, impl="pallas_interpret", kv_len=kv_len,
+                       block_kv=64, num_splits=4)
+    assert max_err(o_unsplit, o_k) < TOL
+
+
+def test_contig_split_empty_rows_and_splits(rng_key):
+    """kv_len = 0 rows and splits with no valid blocks stay exact zeros /
+    merge-inert (the NEG_INF-finite convention end to end)."""
+    b, hq, hkv, skv, d = 3, 4, 2, 256, 64
+    q, k, v = _mk(rng_key, b, hq, hkv, skv, d)
+    kv_len = jnp.array([0, 17, 256], jnp.int32)
+    for ns in (1, 4):
+        o = decode(q, k, v, kv_len=kv_len, block_kv=64, num_splits=ns,
+                   interpret=True)
+        assert bool(jnp.isfinite(o).all())
+        assert float(jnp.abs(o[0]).max()) == 0.0   # fully-masked row → zeros
+    o_ref = decode_reference(q, k, v, kv_len=np.array([1, 17, 256]))
+    o4 = decode(q, k, v, kv_len=kv_len, block_kv=64, num_splits=4,
+                interpret=True)
+    assert max_err(o4[1:], o_ref[1:]) < TOL
+
+
+def test_small_skv_pads_to_tile(rng_key):
+    """skv < 8 must pad to one 8-row KV tile, not emit a sub-8-row block."""
+    b, hq, hkv, d = 2, 4, 2, 64
+    for skv in (1, 3, 5, 7):
+        q, k, v = _mk(jax.random.fold_in(rng_key, skv), b, hq, hkv, skv, d)
+        o = decode(q, k, v, interpret=True)
+        o_ref = decode_reference(q, k, v)
+        assert max_err(o, o_ref) < TOL, f"skv={skv}"
+
+
+def test_xla_split_of_window_short_rows(rng_key):
+    """Windows spanning a split boundary on rows shorter than the window."""
+    b, hq, hkv, skv, d = 2, 4, 2, 300, 64
+    q, k, v = _mk(rng_key, b, hq, hkv, skv, d)
+    kv_len = jnp.array([300, 40], jnp.int32)
+    o1 = spark_decode(q, k, v, impl="xla", kv_len=kv_len, window=128)
+    o2 = spark_decode(q, k, v, impl="xla", kv_len=kv_len, window=128,
+                      num_splits=3)
+    o3 = decode(q, k, v, kv_len=kv_len, window=128, block_kv=64,
+                num_splits=3, interpret=True)
+    assert max_err(o1, o2) < TOL
+    assert max_err(o1, o3) < TOL
+
+
+# ---------------------------------------------------------------------------
+# paged kernel + partial-state composition
+# ---------------------------------------------------------------------------
+
+PAGED_CASES = [
+    # hq, hkv, page_size, window, num_splits
+    (4, 4, 32, None, 2),
+    (8, 2, 32, None, 4),       # GQA
+    (4, 2, 32, 60, 3),         # sliding window, odd split of 5 pages
+    (4, 1, 64, None, 5),       # MQA, one page per split
+]
+
+
+@pytest.mark.parametrize("case", PAGED_CASES, ids=[str(c) for c in PAGED_CASES])
+def test_paged_split_matches_unsplit(rng_key, case):
+    hq, hkv, ps, window, ns = case
+    b, d, t = 3, 64, 5
+    q, kp, vp, bt = _mk_pool(rng_key, b, hq, hkv, d, ps, t)
+    kv_len = jnp.array([t * ps, ps + 3, 0], jnp.int32)
+    o1 = paged_decode(q, kp, vp, bt, kv_len, window=window, interpret=True)
+    o2 = paged_decode(q, kp, vp, bt, kv_len, window=window, num_splits=ns,
+                      interpret=True)
+    assert max_err(o1, o2) < TOL
+    o_ref = paged_decode_reference(q, kp, vp, bt,
+                                   np.maximum(np.asarray(kv_len), 1),
+                                   window=window)
+    assert max_err(o2[:2], o_ref[:2]) < TOL
+    assert float(jnp.abs(o2[2]).max()) == 0.0
+
+
+def test_paged_split_xla_matches_kernel(rng_key):
+    b, hq, hkv, d, ps, t = 2, 4, 2, 64, 32, 4
+    q, kp, vp, bt = _mk_pool(rng_key, b, hq, hkv, d, ps, t)
+    kv_len = jnp.array([t * ps, 40], jnp.int32)
+    o_x1 = spark_paged_decode(q, kp, vp, bt, kv_len, impl="xla")
+    o_x2 = spark_paged_decode(q, kp, vp, bt, kv_len, impl="xla", num_splits=3)
+    o_k = spark_paged_decode(q, kp, vp, bt, kv_len, impl="pallas_interpret",
+                             num_splits=3)
+    assert max_err(o_x1, o_x2) < TOL
+    assert max_err(o_x1, o_k) < TOL
+
+
+def test_partials_split_composes_with_shard_merge(rng_key):
+    """Shard-local splits merge locally: the partial triple is split-count
+    independent, so the distributed cross-shard merge never sees the splits.
+    Mirrors the hand-split two-shard merge test in test_paged.py."""
+    from repro.core import online_softmax as osm
+    b, hq, hkv, d, ps, t = 2, 4, 2, 64, 32, 4
+    q, kp, vp, bt = _mk_pool(rng_key, b, hq, hkv, d, ps, t)
+    kv_len = jnp.array([t * ps, ps + 9], jnp.int32)
+    # "shard" split: first two table entries vs last two, as validity masks
+    v1 = jnp.asarray([[1, 1, 0, 0]] * b, jnp.int32)
+    v2 = 1 - v1
+    for ns in (1, 2, 4):
+        parts = [paged_decode_partials(q, kp, vp, bt, kv_len, block_valid=bv,
+                                       num_splits=ns, interpret=True)
+                 for bv in (v1, v2)]
+        states = [osm.SoftmaxState(m=m, l=l, acc=a) for a, m, l in parts]
+        o, _ = osm.finalize(osm.merge(*states), out_dtype=q.dtype)
+        o_full = paged_decode(q, kp, vp, bt, kv_len, interpret=True)
+        assert max_err(o, o_full) < TOL, f"num_splits={ns}"
+
+
+def test_partials_triple_is_split_invariant(rng_key):
+    b, hq, hkv, d, ps, t = 2, 8, 2, 64, 32, 6
+    q, kp, vp, bt = _mk_pool(rng_key, b, hq, hkv, d, ps, t)
+    kv_len = jnp.array([t * ps, 3 * ps - 1], jnp.int32)
+    a1, m1, l1 = paged_decode_partials(q, kp, vp, bt, kv_len, interpret=True)
+    for ns in (2, 3, 6):
+        a2, m2, l2 = paged_decode_partials(q, kp, vp, bt, kv_len,
+                                           num_splits=ns, interpret=True)
+        assert max_err(m1, m2) < TOL
+        assert max_err(l1, l2) < 1e-4      # l is an un-normalised sum
+        assert max_err(a1, a2) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# engine: the split count is a launch parameter, not a semantic
+# ---------------------------------------------------------------------------
+
+def _smoke_cfg():
+    from repro import configs
+    return dataclasses.replace(configs.smoke_config("qwen3_14b"),
+                               dtype=jnp.float32, remat=False)
+
+
+def test_engine_split_decode_is_token_identical():
+    from repro.models import lm
+    from repro.serving import PagedCacheConfig, ServingEngine
+
+    cfg = _smoke_cfg()
+    params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rs = np.random.RandomState(0)
+    reqs = [(rs.randint(0, cfg.vocab_size, size=L).astype(np.int32), g)
+            for L, g in [(12, 6), (7, 8), (9, 4)]]
+    pcfg = PagedCacheConfig(page_size=4, num_pages=16, max_batch=2,
+                            max_pages_per_seq=6)
+    outs = {}
+    for ns in (1, 3):
+        eng = ServingEngine(cfg, pcfg, params, impl="xla", prefill_len=24,
+                            xla_chunk=16, num_splits=ns)
+        assert eng.num_splits == ns
+        outs[ns], _ = eng.run(list(reqs))
+    for rid in outs[1]:
+        assert np.array_equal(outs[1][rid], outs[3][rid]), f"request {rid}"

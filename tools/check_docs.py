@@ -12,10 +12,10 @@ Four cheap checks that catch the usual ways docs rot:
    pointing readers at deleted design notes (the seed's docstrings cited two
    long-gone design/experiment logs for two PRs);
 4. docstring coverage over the packages whose behaviour the docs narrate in
-   detail (``serving/``, ``kernels/``): every public module, public top-level
-   function/class and public method must carry a docstring — an undocumented
-   entry point there is exactly the drift the scheduling/kernels docs would
-   silently diverge around.
+   detail (``serving/``, ``kernels/``, ``perf/``): every public module,
+   public top-level function/class and public method must carry a docstring —
+   an undocumented entry point there is exactly the drift the
+   scheduling/kernels/roofline docs would silently diverge around.
 
 Exit code 0 = clean; 1 = drift, with one line per problem.
 """
@@ -103,7 +103,7 @@ def check_py_doc_refs() -> list:
 
 # packages with doc pages narrating their internals — keep the code
 # self-describing so the narration has something stable to point at
-DOCSTRING_PKGS = ("src/repro/serving", "src/repro/kernels")
+DOCSTRING_PKGS = ("src/repro/serving", "src/repro/kernels", "src/repro/perf")
 
 
 def _missing_docstrings(tree: ast.Module, relpath: str) -> list:
