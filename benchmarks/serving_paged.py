@@ -26,12 +26,21 @@ Sections:
   reserved-vs-live-token utilization of each policy — lazy is strictly
   higher on any trace with generation (reserved pages track live tokens),
   at the price of occasional preemptions under pressure.
+* ``prefix`` (--prefix, and the whole of --smoke) — the engine on a trace
+  where every request opens with one common system prompt, run with prefix
+  caching off vs. on (``share_prefix=True``): matched page-aligned prompt
+  blocks alias the already-prefilled physical pages, so the shared prefix is
+  prefilled **once** and every later request skips it.  Reports prefill
+  tokens run vs. skipped, physical pages allocated per request, and the
+  copy-on-write count — and asserts the generations are bit-identical to
+  the unshared run, which is the whole point of content-addressed sharing.
 
 The container is CPU-only: wall-clock numbers time the XLA algorithms (pass
 --impl pallas_interpret to run the actual kernels, slow); the byte accounting
 is layout math and holds on any backend.
 
-    PYTHONPATH=src python benchmarks/serving_paged.py [--engine]
+    PYTHONPATH=src python benchmarks/serving_paged.py [--engine] [--prefix]
+    PYTHONPATH=src python benchmarks/serving_paged.py --smoke    # CI guard
 """
 
 from __future__ import annotations
@@ -62,7 +71,17 @@ def main():
                          "(default: all visible devices)")
     ap.add_argument("--engine", action="store_true",
                     help="also run the continuous-batching engine end to end")
+    ap.add_argument("--prefix", action="store_true",
+                    help="also run the shared-prefix engine comparison "
+                         "(prefix caching off vs. on)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI guard: only the shared-prefix engine "
+                         "comparison, small trace, identity asserted")
     args = ap.parse_args()
+
+    if args.smoke:
+        prefix_bench(np.random.RandomState(0), smoke=True)
+        return
 
     rs = np.random.RandomState(0)
     b, hq, hkv, d, ps = (args.batch, args.heads, args.kv_heads, args.head_dim,
@@ -112,6 +131,8 @@ def main():
 
     if args.engine:
         engine_bench(rs)
+    if args.prefix:
+        prefix_bench(rs)
 
 
 def build_pool(rs, kc, vc, kv_len, num_pages, max_pages, ps, n_shards):
@@ -200,6 +221,76 @@ def engine_bench(rs):
     row("serving_paged/engine_util_gain", 0.0,
         f"lazy/eager={st_l['mean_utilization'] / st_e['mean_utilization']:.2f}x;"
         f"token_identical={same}")
+
+
+def prefix_bench(rs, smoke: bool = False):
+    """Shared-system-prompt trace: prefix caching off vs. on.
+
+    Every request is ``system prefix + per-request suffix`` — the agent /
+    chat-serving shape where one long instruction block fronts every prompt.
+    With sharing on, the first wave prefills the prefix once and registers
+    its pages; every later request aliases them at admission, so its prefill
+    shrinks to the suffix and its page footprint to the unshared tail.
+    Asserts the generations are bit-identical between the two runs (smoke
+    mode additionally asserts that reuse actually engaged: tokens skipped,
+    pages per request down).
+    """
+    import dataclasses
+
+    from repro import configs
+    from repro.models import lm
+    from repro.serving import PagedCacheConfig, ServingEngine
+
+    cfg = dataclasses.replace(configs.smoke_config("qwen3_14b"),
+                              dtype=jnp.float32, remat=False)
+    params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
+    if smoke:
+        pcfg = PagedCacheConfig(page_size=8, num_pages=25, max_batch=2,
+                                max_pages_per_seq=6)
+        n_requests, prefix_len, prefill_len = 6, 24, 48
+    else:
+        pcfg = PagedCacheConfig(page_size=16, num_pages=65, max_batch=4,
+                                max_pages_per_seq=12)
+        n_requests, prefix_len, prefill_len = 16, 96, 192
+    prefix = rs.randint(0, cfg.vocab_size, size=prefix_len).astype(np.int32)
+    reqs = [(np.concatenate([prefix, rs.randint(
+        0, cfg.vocab_size,
+        size=int(rs.randint(4, 9))).astype(np.int32)]),
+        int(rs.randint(4, 9))) for _ in range(n_requests)]
+
+    outs = {}
+    for mode, share in (("off", False), ("on", True)):
+        eng = ServingEngine(cfg, pcfg, params, impl="xla",
+                            prefill_len=prefill_len, xla_chunk=16,
+                            share_prefix=share)
+        out, stats = eng.run(list(reqs))
+        outs[mode] = (out, stats)
+        row(f"serving_paged/prefix_{mode}", stats["wall_s"] * 1e6,
+            f"tok_s={stats['tokens_per_s']:.1f};"
+            f"prefill_tokens={stats['prefill_tokens']:.0f};"
+            f"skipped={stats['prefill_tokens_skipped']:.0f};"
+            f"pages_per_req={stats['pages_allocated'] / len(out):.2f};"
+            f"cow={stats['cow_copies']:.0f}")
+    (out_off, st_off), (out_on, st_on) = outs["off"], outs["on"]
+    same = all(np.array_equal(out_off[r], out_on[r]) for r in out_off)
+    assert same, "prefix sharing changed a generation — COW/index bug"
+    total_prompt = sum(len(t) for t, _ in reqs)
+    row("serving_paged/prefix_reuse", 0.0,
+        f"skipped_fraction={st_on['prefill_tokens_skipped'] / total_prompt:.2f};"
+        f"pages_ratio={st_on['pages_allocated'] / st_off['pages_allocated']:.2f};"
+        f"token_identical={same}")
+    if smoke:
+        # the CI guard: sharing must actually engage, not just not crash
+        assert st_on["prefill_tokens_skipped"] >= \
+            (n_requests - pcfg.max_batch) * (prefix_len - pcfg.page_size), \
+            "prefix reuse below the aligned-prefix floor"
+        assert st_on["prefill_tokens"] < st_off["prefill_tokens"]
+        assert st_on["pages_allocated"] < st_off["pages_allocated"]
+        print("smoke ok: shared prefixes skipped "
+              f"{st_on['prefill_tokens_skipped']:.0f} prefill tokens, "
+              f"pages/request {st_on['pages_allocated'] / len(out_on):.2f} "
+              f"vs {st_off['pages_allocated'] / len(out_off):.2f} unshared, "
+              "generations bit-identical")
 
 
 if __name__ == "__main__":

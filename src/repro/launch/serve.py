@@ -14,6 +14,13 @@ utilization than the default eager full-budget reservation):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_14b --smoke \\
       --paged --lazy --requests 8 --gen 32
 
+Prefix caching + chunked prefill (every synthetic request opens with a
+common system prompt; matched page-aligned blocks alias already-prefilled
+pages and skip their prefill compute, --prefill-chunk interleaves long
+prompts with decode steps):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3_14b --smoke \\
+      --paged --share-prefix --prefill-chunk 32 --requests 8 --gen 32
+
 Distributed paged serving (page pool sharded over the mesh's model axis;
 needs that many devices, e.g. XLA_FLAGS=--xla_force_host_platform_device_count=2):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_14b --smoke \\
@@ -60,6 +67,13 @@ def main(argv=None):
     ap.add_argument("--num-pages", type=int, default=0,
                     help="--paged: override the page-pool size (0 = auto; "
                          "shrink it to watch --lazy preempt)")
+    ap.add_argument("--share-prefix", action="store_true",
+                    help="--paged: content-addressed prefix caching + "
+                         "copy-on-write pages (requests then share a common "
+                         "system prompt so the cache has something to hit)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="--paged: max prompt tokens prefilled per engine "
+                         "iteration (0 = whole prompts at once)")
     ap.add_argument("--num-splits", type=int, default=0,
                     help="split-KV decode: parallel KV partitions per "
                          "(batch, kv-head) row (0 = 1, or autotuned with "
@@ -156,16 +170,24 @@ def serve_paged(cfg, args, mesh=None):
     eng = ServingEngine(cfg, pcfg, params, impl=args.impl, mesh=mesh,
                         prefill_len=prefill_len, lazy=args.lazy,
                         num_splits=args.num_splits or None,
-                        autotune=args.autotune)
+                        autotune=args.autotune,
+                        share_prefix=args.share_prefix,
+                        prefill_chunk=args.prefill_chunk or None)
     if args.autotune or args.num_splits:
         print(f"decode num_splits: {eng.num_splits}"
               + (" (autotuned)" if args.autotune and not args.num_splits
                  else ""))
+    # with sharing on, every request opens with one common system prompt
+    # (half the nominal prompt length) so the prefix cache has repeats to hit
+    system = (rs.randint(0, cfg.vocab_size, size=max(1, args.prompt_len // 2))
+              if args.share_prefix else np.zeros(0, np.int64))
     reqs = []
     for _ in range(args.requests):  # ragged: 25%..100% of the nominal lengths
         plen = int(rs.randint(max(1, args.prompt_len // 4), args.prompt_len + 1))
         gen = int(rs.randint(max(1, args.gen // 4), args.gen + 1))
-        reqs.append((rs.randint(0, cfg.vocab_size, size=plen), gen))
+        tail = rs.randint(0, cfg.vocab_size, size=plen)
+        reqs.append((np.concatenate([system, tail])[:pcfg.max_seq_len
+                                                    - args.gen - 1], gen))
     out, stats = eng.run(reqs)
     mode = "lazy" if args.lazy else "eager"
     print(f"served {len(out)} requests ({stats['generated_tokens']:.0f} tokens) "
@@ -175,6 +197,11 @@ def serve_paged(cfg, args, mesh=None):
     print(f"scheduler: {stats['preemptions']:.0f} preemptions, "
           f"{stats['pages_grown']:.0f} pages grown lazily, "
           f"{stats['pages_reclaimed']:.0f} out-of-window pages reclaimed")
+    if args.share_prefix or args.prefill_chunk:
+        print(f"prefix/chunking: {stats['prefill_tokens']:.0f} prompt tokens "
+              f"prefilled, {stats['prefill_tokens_skipped']:.0f} skipped via "
+              f"prefix hits, {stats['pages_shared']:.0f} page aliases, "
+              f"{stats['cow_copies']:.0f} copy-on-writes")
     print("generated (request 0):", out[0][:16])
 
 

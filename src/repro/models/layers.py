@@ -180,7 +180,11 @@ def apply_attention(p, x, ctx: Ctx, cfg, *, positions=None, cache=None,
     paged: serving-side routing for paged caches —
       prefill: {"dest": [B, S]} flat page-pool token slots per input token
       (padding → the trash page), precomputed by BlockTables.prefill_dest;
-      decode: {"block_tables": [B, T], "kv_len": [B]}.
+      decode: {"block_tables": [B, T], "kv_len": [B]};
+      chunked/suffix prefill additionally carries {"token_tables": [B, S, T],
+      "token_kv_len": [B, S]} — each token then attends through its own
+      block-table row (history pages + same-row predecessors) instead of the
+      in-row segment mask; positions are global per token.
     """
     b, s, d = x.shape
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -306,6 +310,33 @@ def apply_attention(p, x, ctx: Ctx, cfg, *, positions=None, cache=None,
                 ck = _scatter_pages(cache["k_pages"], dest, kv_vals[0])
                 cv = _scatter_pages(cache["v_pages"], dest, kv_vals[1])
             new_cache = {"k_pages": ck, "v_pages": cv}
+            if "token_tables" in paged:
+                # CHUNKED / suffix prefill: these tokens continue sequences
+                # whose earlier tokens already live in pages (prefix-cache
+                # hits, earlier chunks), so in-row attention is not enough.
+                # The scatter above ran first, so each token can attend to
+                # *everything* before it — history pages and same-row
+                # predecessors alike — through one per-token block-table
+                # read: token t becomes its own decode row with its slot's
+                # table and kv_len = position + 1 (0 for padding → the
+                # kv_len gate finalizes those rows to exact zeros).  No new
+                # kernel: this is the split-KV paged decode with B·S rows.
+                bt_tok = paged["token_tables"].reshape(b * s, -1)
+                kvl_tok = paged["token_kv_len"].reshape(b * s)
+                q_tok = q.transpose(0, 2, 1, 3).reshape(b * s, hq, hd)
+                if ctx.mesh is not None:
+                    from repro.distributed.paged import paged_decode_sharded
+                    o_tok = paged_decode_sharded(
+                        q_tok, ck, cv, bt_tok, kvl_tok, mesh=ctx.mesh,
+                        impl=ctx.impl, window=paged_decode_window(cfg))
+                else:
+                    o_tok = spark_paged_decode(
+                        q_tok, ck, cv, bt_tok, kvl_tok, impl=ctx.impl,
+                        window=paged_decode_window(cfg))
+                o = o_tok.reshape(b, s, hq, hd).transpose(0, 2, 1, 3)
+                o = ctx.c(o, "batch", "heads", "seq_full", "head_dim")
+                out = o.transpose(0, 2, 1, 3).reshape(b, s, hq * hd) @ p["wo"]
+                return ctx.c(out, "batch", "seq", "embed"), new_cache
         elif cache is not None:  # contiguous prefill (position 0): fill it
             # this cache stores no segment structure, so a packed prefill
             # would silently decode across prompt boundaries later — packed

@@ -399,6 +399,30 @@ def paged_prefill(cfg, params, ctx: Ctx, tokens, segment_ids, positions, dest,
     return logits, caches
 
 
+def paged_chunk_prefill(cfg, params, ctx: Ctx, tokens, positions, dest,
+                        token_tables, token_kv_len, caches):
+    """Chunked / suffix packed prefill: prompt spans whose earlier tokens
+    already live in pages (prefix-cache hits, earlier chunks of the same
+    prompt).
+
+    tokens/positions [B, S] with *global* per-token positions (RoPE must
+    match what the prefix pages were written with); dest [B, S] flat
+    page-pool token slots (BlockTables.span_dest, padding → trash);
+    token_tables [B, S, T] each token's slot's block-table row;
+    token_kv_len [B, S] = position + 1 for real tokens, 0 for padding.
+    Each layer scatters the span's K/V into the pages first, then every
+    token attends through its own block-table row — history and same-row
+    predecessors alike — so no segment ids are needed (isolation comes from
+    the tables).  Returns (logits [B, S, Vpad], caches); the engine reads a
+    prompt's last-token row when its final chunk lands.
+    """
+    logits, caches, _ = forward(
+        cfg, params, ctx, tokens=tokens, caches=caches, positions=positions,
+        paged={"dest": dest, "token_tables": token_tables,
+               "token_kv_len": token_kv_len})
+    return logits, caches
+
+
 def paged_decode_step(cfg, params, ctx: Ctx, token, caches, block_tables,
                       kv_len):
     """One decode step over the paged cache. token [B] int32, block_tables

@@ -142,6 +142,7 @@ class ServeArtifacts:
     cache_init_fn: Any
     rules: Optional[ShardingRules]          # prefill/param rules
     rules_decode: Optional[ShardingRules] = None
+    chunk_prefill_fn: Any = None            # paged only: chunked/suffix prefill
 
 
 def make_serve_steps(cfg, *, mesh=None, impl: str = "xla", max_len: int = 2048,
@@ -159,6 +160,11 @@ def make_serve_steps(cfg, *, mesh=None, impl: str = "xla", max_len: int = 2048,
           → (logits [B,S,Vpad], caches)     # packed prompts, B prefill rows
       decode_fn(params, token, caches, block_tables, kv_len)
           → (logits [B,Vpad], caches)       # B = paged.max_batch slots
+      chunk_prefill_fn(params, tokens, positions, dest, token_tables,
+                       token_kv_len, caches)
+          → (logits [B,S,Vpad], caches)     # chunked/suffix prefill spans
+                                            # (global positions; per-token
+                                            # block-table attention)
 
     num_splits / block_kv: split-KV launch parameters for the decode step
     (static — baked into the jitted step; pick both with perf/autotune.py or
@@ -207,11 +213,21 @@ def make_serve_steps(cfg, *, mesh=None, impl: str = "xla", max_len: int = 2048,
             return lm.paged_decode_step(cfg, params, ctx, token, caches,
                                         block_tables, kv_len)
 
-        # both steps donate the page pools (the dominant serving tensors):
+        def chunk_prefill_fn(params, tokens, positions, dest, token_tables,
+                             token_kv_len, caches):
+            ctx = _make_ctx(cfg, rules, impl, 0, True, xla_chunk=xla_chunk,
+                            xla_unroll=xla_unroll, mesh=mesh)
+            return lm.paged_chunk_prefill(cfg, params, ctx, tokens, positions,
+                                          dest, token_tables, token_kv_len,
+                                          caches)
+
+        # all steps donate the page pools (the dominant serving tensors):
         # the caller always threads the returned caches into the next call
         return ServeArtifacts(prefill_fn=jax.jit(prefill_fn,
                                                  donate_argnums=(5,)),
                               decode_fn=jax.jit(decode_fn, donate_argnums=(2,)),
+                              chunk_prefill_fn=jax.jit(chunk_prefill_fn,
+                                                       donate_argnums=(6,)),
                               cache_init_fn=cache_init, rules=rules,
                               rules_decode=rules_dec)
 

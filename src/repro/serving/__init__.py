@@ -7,8 +7,10 @@ allocated on admission and freed on completion, with per-sequence block
 tables mapping logical KV blocks → physical pages (vLLM's PagedAttention
 idea, built on this repo's scalar-prefetch ragged-skip machinery):
 
-* ``paged_cache``  — page allocator, block tables (per-block ownership:
-                     lazy growth + out-of-window reclamation), scatter math.
+* ``paged_cache``  — refcounted page allocator, content-addressed prefix
+                     index, block tables (per-block ownership: lazy growth,
+                     out-of-window reclamation, prefix sharing with
+                     copy-on-write), scatter math.
 * ``scheduler``    — FCFS continuous batching as an admission → grow →
                      preempt → re-prefill state machine: eager (full-budget
                      reservation) or lazy (prompt-only admission, one-page
@@ -17,7 +19,10 @@ idea, built on this repo's scalar-prefetch ragged-skip machinery):
 * ``engine``       — the serving loop: segment-aware packed prefill (one
                      fused forward fills many prompts' pages, PR-1 varlen
                      masking) + block-table flash-decode each step, with
-                     sliding-window page reclamation between steps.
+                     sliding-window page reclamation between steps; opt-in
+                     prefix caching (``share_prefix=True``) and chunked
+                     prefill (``prefill_chunk=``) ride on one extra jitted
+                     step that prefills suffix spans against cached pages.
 
 Kernel-level entry points live in ``core.attention.spark_paged_decode`` and
 ``kernels/decode.py::flash_paged_decode``; jitted model steps come from
@@ -29,10 +34,11 @@ See docs/serving.md for the design and a quickstart.
 
 from repro.serving.engine import ServingEngine
 from repro.serving.paged_cache import (BlockTables, PageAllocator,
-                                       PagedCacheConfig, TRASH_PAGE)
+                                       PagedCacheConfig, PrefixIndex,
+                                       TRASH_PAGE)
 from repro.serving.scheduler import ActiveSeq, Request, Scheduler
 
 __all__ = [
     "ServingEngine", "BlockTables", "PageAllocator", "PagedCacheConfig",
-    "TRASH_PAGE", "ActiveSeq", "Request", "Scheduler",
+    "PrefixIndex", "TRASH_PAGE", "ActiveSeq", "Request", "Scheduler",
 ]

@@ -11,11 +11,31 @@ emits its ``eos_id`` (set per request or engine-wide) or exhausts
 ``max_new_tokens`` — EOS eviction frees the slot and pages immediately.
 
 Admission policy (``lazy=``): eager reserves a sequence's full page budget up
-front and never preempts; lazy reserves only the prompt pages, grows decode
-pages one at a time, and re-prefills preempted rows with their generated
-tokens appended to the prompt — token-identical to eager under greedy decode
-(tests assert it), at strictly higher pool utilization.  The state machine
-and its invariants are documented in docs/scheduling.md.
+front and never preempts on growth; lazy reserves only the prompt pages,
+grows decode pages one at a time, and re-prefills preempted rows with their
+generated tokens appended to the prompt — token-identical to eager under
+greedy decode (tests assert it), at strictly higher pool utilization.  The
+state machine and its invariants are documented in docs/scheduling.md.
+
+Prefix caching (``share_prefix=``): admission matches each prompt's
+page-aligned blocks against a content-addressed index and aliases matched
+blocks onto the existing physical pages — those tokens skip both page
+allocation and prefill compute; the first divergent write to a shared page
+copy-on-writes it (the scheduler queues the device page copy, applied here
+before the next step).  Finished/preempted sequences park their indexed
+pages in a cached LRU ring, so later identical prefixes revive them for
+free.  Generations are bit-identical to the unshared engine: identical
+prefixes at identical positions have identical K/V, and COW isolates every
+divergence (with sharing on, even eager admission can preempt when a COW
+allocation finds the pool dry).
+
+Chunked prefill (``prefill_chunk=``): prompts are prefilled in spans of at
+most that many tokens per engine iteration, interleaved with decode steps —
+one long prompt no longer stalls the whole batch.  A span scatters its K/V
+into the pages first and then attends per-token through its own block-table
+row (``chunk_prefill_fn``), which also serves prefix-cache hits: a matched
+prompt just prefills its unmatched suffix the same way.  Greedy decode makes
+chunked runs token-identical to unchunked ones.
 
 The jitted steps see fixed shapes only — [B=max_batch] decode rows, packed
 prefill rows of ``prefill_len`` — so the whole ragged, churning workload runs
@@ -55,7 +75,9 @@ class ServingEngine:
                  eos_id: Optional[int] = None, lazy: bool = False,
                  reclaim: Optional[bool] = None,
                  poison_reclaimed: bool = False,
-                 num_splits: Optional[int] = None, autotune: bool = False):
+                 num_splits: Optional[int] = None, autotune: bool = False,
+                 share_prefix: bool = False,
+                 prefill_chunk: Optional[int] = None):
         """lazy: admission policy (module docstring). reclaim: free
         fully-out-of-window pages each step — defaults to "whenever the arch
         has a sliding window"; pass False to pin pages for a model's whole
@@ -66,7 +88,11 @@ class ServingEngine:
         num_splits: split-KV decode grid cells per (batch, kv-head) — baked
         into the jitted decode step (default 1). autotune: pick num_splits
         from the perf/autotune.py cost model for this engine's geometry,
-        through its persistent cache (an explicit num_splits wins)."""
+        through its persistent cache (an explicit num_splits wins).
+        share_prefix: content-addressed prefix caching + copy-on-write pages
+        (module docstring). prefill_chunk: max prompt tokens prefilled per
+        engine iteration (None: whole prompts at once), interleaving long
+        prompts with decode steps."""
         assert cfg.causal, "serving needs an autoregressive arch"
         self.cfg = cfg
         self.pcfg = paged_cfg
@@ -79,6 +105,10 @@ class ServingEngine:
             raise ValueError("page reclamation needs a sliding-window arch "
                              "(cfg.attn_window is None)")
         self.poison_reclaimed = poison_reclaimed
+        self.share_prefix = share_prefix
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be at least one token")
+        self.prefill_chunk = prefill_chunk
         if num_splits is None:
             num_splits = self._autotuned_splits() if autotune else 1
         self.num_splits = num_splits
@@ -96,15 +126,19 @@ class ServingEngine:
         self.params = params
         self.prefill_fn = arts.prefill_fn
         self.decode_fn = arts.decode_fn
+        self.chunk_prefill_fn = arts.chunk_prefill_fn
         self.caches = arts.cache_init_fn()
         # the scheduler learns the window only when reclamation is on: with
         # reclaim=False pinned-pages runs keep the full-prefix reservation
         # so they reflect the pre-reclamation footprint faithfully
         self.scheduler = Scheduler(
             paged_cfg, lazy=lazy,
-            window=self.window if self.reclaim else None)
+            window=self.window if self.reclaim else None,
+            share_prefix=share_prefix,
+            chunked=prefill_chunk is not None)
         self.util_samples: List[float] = []
         self.pool_samples: List[float] = []      # allocated / usable pages
+        self.prefill_tokens = 0                  # prompt tokens run by prefill
         self._next_rid = 0
 
     def _autotuned_splits(self) -> int:
@@ -138,21 +172,24 @@ class ServingEngine:
         self._next_rid = max(self._next_rid, rid + 1)
         req = Request(rid=rid, tokens=tokens, max_new_tokens=max_new_tokens,
                       eos_id=self.eos_id if eos_id is None else eos_id)
-        if req.prompt_len < 1:
-            raise ValueError(f"request {rid}: empty prompt")
-        if req.prompt_len > self.prefill_len:
+        # prefill-row-width checks live here (the scheduler doesn't know the
+        # engine's prefill_len); empty-prompt / duplicate-rid / pool-capacity
+        # validation lives in Scheduler.submit so direct scheduler users get
+        # the same guarantees
+        if req.prompt_len > self.prefill_len \
+                and not (self.share_prefix or self.prefill_chunk):
+            # chunked prefill and prefix-hit suffixes span multiple rows, so
+            # the one-row limit only binds the classic whole-prompt path
             raise ValueError(f"prompt of {req.prompt_len} tokens exceeds "
                              f"prefill_len={self.prefill_len}")
-        if self.lazy and req.budget_tokens > self.prefill_len:
+        if self.lazy and req.budget_tokens > self.prefill_len \
+                and not (self.share_prefix or self.prefill_chunk):
             # a preempted row re-prefills prompt+generated, which can reach
             # the full budget — reject now rather than overflow a row later
             raise ValueError(
                 f"request {rid}: lazy serving needs prefill_len >= the "
                 f"prompt+generation budget ({req.budget_tokens}) so a "
                 f"preempted sequence can re-prefill")
-        if self.pcfg.pages_for(req.budget_tokens) > self.pcfg.usable_pages:
-            raise ValueError(f"request {rid} needs more pages than the pool "
-                             f"holds ({self.pcfg.usable_pages} usable)")
         self.scheduler.submit(req)
         return rid
 
@@ -171,7 +208,8 @@ class ServingEngine:
         return rows
 
     def _prefill(self, seqs: List[ActiveSeq]):
-        """Run packed prefill over newly admitted (or resumed) sequences."""
+        """Run classic packed prefill over whole prompts (no cached prefix:
+        per-segment positions from zero, in-row segment-masked attention)."""
         tables = self.scheduler.tables
         for row in self._pack_rows(seqs):
             tokens = np.zeros((1, self.prefill_len), np.int32)
@@ -193,25 +231,137 @@ class ServingEngine:
             logits = np.asarray(logits[0, :, :self.cfg.vocab_size])
             for seq, li in zip(row, last_idx):
                 tables.kv_len[seq.slot] = seq.request.prompt_len
+                seq.prefilled = seq.request.prompt_len
+                tables.register_prefilled(seq.slot, seq.prefilled)
                 seq.generated.append(int(logits[li].argmax()))
+
+    def _prefill_chunks(self, spans: List[Tuple[ActiveSeq, int, int]]):
+        """Run chunked/suffix prefill spans — tokens ``[start, end)`` of
+        sequences whose earlier tokens already sit in pages (prefix hits or
+        earlier chunks).  Spans pack first-fit into prefill_len-wide rows;
+        each row scatters its K/V first and attends per-token through the
+        owning slot's block-table row, so spans of one prompt may split
+        across rows (later rows read earlier rows' pages)."""
+        tables = self.scheduler.tables
+        width = self.prefill_len
+        rows: List[List[Tuple[ActiveSeq, int, int]]] = [[]]
+        used = 0
+        for sp in spans:
+            n = sp[2] - sp[1]
+            if used + n > width:
+                rows.append([])
+                used = 0
+            rows[-1].append(sp)
+            used += n
+        for row in rows:
+            tokens = np.zeros((1, width), np.int32)
+            pos = np.zeros((1, width), np.int32)
+            kvl = np.zeros((1, width), np.int32)   # pad rows finalize to zero
+            ttab = np.full((1, width, self.pcfg.max_pages_per_seq),
+                           TRASH_PAGE, np.int32)
+            dest = np.zeros((1, width), np.int32)  # pad → trash slot 0
+            off = 0
+            marks = []
+            for seq, a, b in row:
+                n = b - a
+                tokens[0, off:off + n] = seq.request.tokens[a:b]
+                pos[0, off:off + n] = np.arange(a, b)
+                kvl[0, off:off + n] = np.arange(a, b) + 1
+                ttab[0, off:off + n] = tables.tables[seq.slot]
+                dest[0, off:off + n] = tables.span_dest(seq.slot, a, b)
+                marks.append((seq, b, off + n - 1))
+                off += n
+            logits, self.caches = self.chunk_prefill_fn(
+                self.params, jnp.asarray(tokens), jnp.asarray(pos),
+                jnp.asarray(dest), jnp.asarray(ttab), jnp.asarray(kvl),
+                self.caches)
+            logits = np.asarray(logits[0, :, :self.cfg.vocab_size])
+            for seq, end, li in marks:
+                seq.prefilled = end
+                tables.kv_len[seq.slot] = end
+                tables.register_prefilled(seq.slot, end)
+                if end == seq.request.prompt_len:
+                    seq.generated.append(int(logits[li].argmax()))
+
+    def _prefill_step(self) -> int:
+        """Advance every mid-prompt row, spending at most ``prefill_chunk``
+        prompt tokens (unlimited when chunking is off).  Whole prompts with
+        no cached prefix take the classic packed path — bit-identical to the
+        unshared, unchunked engine — and everything else (prefix-hit
+        suffixes, chunk continuations) goes through the per-token path.
+        Returns the number of prompt tokens processed."""
+        sched = self.scheduler
+        pre = [seq for seq in sorted(sched.active.values(),
+                                     key=lambda s: s.birth) if seq.prefilling]
+        if not pre:
+            return 0
+        budget = self.prefill_chunk or (1 << 62)
+        classic: List[ActiveSeq] = []
+        chunks: List[Tuple[ActiveSeq, int, int]] = []
+        used = 0
+        for seq in pre:
+            start = seq.prefilled
+            total = seq.request.prompt_len
+            while start < total and used < budget:
+                end = min(total, start + min(budget - used, self.prefill_len))
+                if start == 0 and end == total:
+                    classic.append(seq)
+                else:
+                    chunks.append((seq, start, end))
+                used += end - start
+                start = end
+        if classic:
+            self._prefill(classic)
+        if chunks:
+            self._prefill_chunks(chunks)
+        self.prefill_tokens += used
+        return used
 
     # -- one decode step over every active slot ----------------------------
     def _decode(self):
-        """One fixed-shape decode step over all max_batch slots."""
+        """One fixed-shape decode step over all max_batch slots.  Mid-prefill
+        rows ride along masked — trash table, kv_len 0, token 0 — so their
+        half-written pages are neither read nor advanced; their garbage
+        logits are ignored like any inactive slot's."""
         sched = self.scheduler
         tables = sched.tables
         tok = np.zeros((self.pcfg.max_batch,), np.int32)
+        bt, kvl = tables.tables, tables.kv_len
+        if any(seq.prefilling for seq in sched.active.values()):
+            bt, kvl = bt.copy(), kvl.copy()
+            for slot, seq in sched.active.items():
+                if seq.prefilling:
+                    bt[slot] = TRASH_PAGE
+                    kvl[slot] = 0
         for slot, seq in sched.active.items():
+            if seq.prefilling:
+                continue
             assert tables.append_dest_ok(slot), \
                 f"slot {slot}: write position escaped its owned pages"
             tok[slot] = seq.generated[-1]
         logits, self.caches = self.decode_fn(
             self.params, jnp.asarray(tok), self.caches,
-            jnp.asarray(tables.tables), jnp.asarray(tables.kv_len))
+            jnp.asarray(bt), jnp.asarray(kvl))
         logits = np.asarray(logits[:, :self.cfg.vocab_size])
         for slot, seq in sched.active.items():
+            if seq.prefilling:
+                continue
             tables.kv_len[slot] += 1
             seq.generated.append(int(logits[slot].argmax()))
+
+    def _apply_cow(self):
+        """Apply queued copy-on-write page copies to every layer's pools —
+        always before the next device step reads the destination pages (the
+        sources still hold their pre-step content: freed source pages are
+        never rewritten before the next alloc-and-write, which follows)."""
+        pairs = self.scheduler.tables.drain_copies()
+        if not pairs:
+            return
+        src = jnp.asarray([s for s, _ in pairs], jnp.int32)
+        dst = jnp.asarray([d for _, d in pairs], jnp.int32)
+        # the page axis of every pool leaf is ndim-3 ([... Hkv, P, ps, D])
+        self.caches = jax.tree.map(
+            lambda x: x.at[..., dst, :, :].set(x[..., src, :, :]), self.caches)
 
     def _poison_pages(self, pages: List[int]):
         """Test hook: clobber freed pages (plus the trash page their table
@@ -243,28 +393,37 @@ class ServingEngine:
             n_pre = sched.preemptions
             if sched.active:
                 sched.ensure_growth()  # running rows claim write pages first
+                self._apply_cow()
             admitted = sched.admit()
             if admitted:
-                self._prefill(admitted)
+                # newly admitted rows may need a copy-on-write before their
+                # first prefill span (a shared partial-tail block, or the
+                # re-prefilled last token of a fully matched prompt)
+                sched.ensure_growth()
+                self._apply_cow()
+            progressed = self._prefill_step()
+            if progressed:
                 sched.evict_finished()     # max_new == 1 finishes at prefill
             if sched.active:
                 # just-prefilled rows may sit exactly on a page boundary;
-                # this second pass may preempt one of them (its prefill work
+                # this pass may preempt one of them (its prefill work
                 # survives in generated_prefix and resumes later)
                 sched.ensure_growth()
-            if sched.active:
+                self._apply_cow()
+            if any(not seq.prefilling for seq in sched.active.values()):
                 u = sched.tables.utilization()
                 self.util_samples.append(u["utilization"])
                 self.pool_samples.append(u["pool_fraction"])
                 self._decode()
                 steps += 1
-            elif sched.waiting and not admitted \
+            elif sched.waiting and not admitted and not progressed \
                     and sched.preemptions == n_pre:
                 # an admitted wave may finish entirely at prefill
-                # (max_new == 1) and a preemption wave empties the active
-                # set to retry next iteration; both are progress — only a
-                # step with no admission, no preemption and nothing active
-                # is a real deadlock
+                # (max_new == 1), a preemption wave empties the active set
+                # to retry next iteration, and a chunked-prefill step may
+                # advance prompts without decoding; all are progress — only
+                # a step with no admission, no prefill progress, no
+                # preemption and nothing decodable is a real deadlock
                 raise RuntimeError(
                     "scheduler stuck: nothing active yet nothing admissible "
                     "— the page pool is too small for the waiting requests")
@@ -285,5 +444,10 @@ class ServingEngine:
             "preemptions": float(sched.preemptions),
             "pages_grown": float(tables.pages_grown),
             "pages_reclaimed": float(tables.pages_reclaimed),
+            "prefill_tokens": float(self.prefill_tokens),
+            "prefill_tokens_skipped": float(sched.prefill_skipped),
+            "pages_shared": float(tables.pages_shared),
+            "pages_allocated": float(tables.allocator.total_allocs),
+            "cow_copies": float(tables.cow_copies),
         }
         return out, stats

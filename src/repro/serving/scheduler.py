@@ -78,6 +78,15 @@ class ActiveSeq:
     slot: int
     birth: int = 0                # admission stamp: preemption evicts max
     generated: List[int] = dataclasses.field(default_factory=list)
+    prefilled: int = 0            # prompt tokens resident in pages so far
+    # (admission seeds it with the prefix-cache hit length; chunked prefill
+    # advances it one budgeted span at a time until it hits prompt_len)
+
+    @property
+    def prefilling(self) -> bool:
+        """Still mid-prompt: excluded from decode steps, fed to the chunked
+        prefill until ``prefilled`` reaches the prompt length."""
+        return self.prefilled < self.request.prompt_len
 
     @property
     def done(self) -> bool:
@@ -99,20 +108,32 @@ class Scheduler:
     """Admission / growth / preemption / eviction over one page pool."""
 
     def __init__(self, cfg: PagedCacheConfig, *, lazy: bool = False,
-                 window: Optional[int] = None):
+                 window: Optional[int] = None, share_prefix: bool = False,
+                 chunked: bool = False):
         """window: the sliding attention window when page reclamation is on
         (None otherwise).  Lazy admission uses it to skip blocks that are
         dead on arrival — a preempted long-tail row resumes by reserving
-        only its O(window) live tail instead of the whole prefix."""
+        only its O(window) live tail instead of the whole prefix.
+        share_prefix: content-addressed prefix caching — admission aliases
+        matched prompt blocks onto existing physical pages (skipping their
+        prefill compute) and divergent writes copy-on-write.
+        chunked: the engine splits prompts into prefill chunks — like
+        share_prefix, this makes prefill read *cached* history instead of
+        in-row activations, which disables the dead-on-arrival block skip
+        (see :meth:`_first_live_block`)."""
         self.cfg = cfg
         self.lazy = lazy
         self.window = window
-        self.tables = BlockTables(cfg)
+        self.share_prefix = share_prefix
+        self.chunked = chunked
+        self.tables = BlockTables(cfg, share_prefix=share_prefix)
         self.waiting: Deque[Request] = collections.deque()
         self.active: Dict[int, ActiveSeq] = {}    # slot → sequence
         self.finished: List[ActiveSeq] = []
         self.preemptions = 0
+        self.prefill_skipped = 0   # prompt tokens served by prefix hits
         self._births = 0
+        self._rids: set = set()    # every rid ever submitted (dup guard)
 
     @property
     def idle(self) -> bool:
@@ -120,11 +141,26 @@ class Scheduler:
         return not self.waiting and not self.active
 
     def submit(self, req: Request):
-        """Queue a request; rejects ones that could never fit the tables."""
+        """Queue a request; rejects ones that could never be admitted —
+        empty prompts, duplicate rids (two requests with the same rid would
+        silently drop one generation from the keyed output), and budgets the
+        block tables or the page pool can never cover (a too-big request
+        would otherwise sit at the queue head and deadlock the serve loop)."""
+        if req.prompt_len < 1:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if req.rid in self._rids:
+            raise ValueError(
+                f"request rid {req.rid} is already submitted — rids key the "
+                f"output dict, a duplicate would drop one generation")
         if req.budget_tokens > self.cfg.max_seq_len:
             raise ValueError(
                 f"request {req.rid}: prompt+generation of {req.budget_tokens} "
                 f"tokens can never fit max_seq_len={self.cfg.max_seq_len}")
+        if self.cfg.pages_for(req.budget_tokens) > self.cfg.usable_pages:
+            raise ValueError(
+                f"request {req.rid} needs more pages than the pool holds "
+                f"({self.cfg.usable_pages} usable)")
+        self._rids.add(req.rid)
         self.waiting.append(req)
 
     def evict_finished(self) -> List[ActiveSeq]:
@@ -171,21 +207,26 @@ class Scheduler:
         """Guarantee every surviving active row owns its next write page.
 
         Oldest rows grow first; when the pool is dry the *youngest* active
-        sequence is preempted and the allocation retried — freeing a victim
-        always returns at least one page, so the loop terminates.  If the
-        youngest is the row being grown, it preempts itself; its resumed
-        prompt needs one page more than it just freed, which the submit-time
-        check (budget pages <= usable pages) guarantees the pool can supply
-        once it is the admission front-runner — each such cycle still moves
-        at least one generated token into the prefix, so it cannot loop
-        forever.  Returns the preempted rids.  Eager mode owns every budget
-        page up front, so this is a no-op there.
+        sequence is preempted and the allocation retried — each preemption
+        strictly shrinks the active set, so the loop terminates even when a
+        victim's pages were all shared (freeing them only drops refcounts).
+        If the youngest is the row being grown, it preempts itself; its
+        resumed prompt needs one page more than it just freed, which the
+        submit-time check (budget pages <= usable pages) guarantees the pool
+        can supply once it is the admission front-runner — each such cycle
+        still moves at least one generated token into the prefix, so it
+        cannot loop forever.  Under prefix sharing this pass also performs
+        the copy-on-write step: a row whose write block sits on a shared
+        page moves to a fresh page here (the engine applies the queued
+        device copies right after).  Returns the preempted rids.  Eager
+        mode owns every budget page up front, so growth is a no-op there
+        (COW is not — with sharing on, even eager can preempt here).
         """
         preempted: List[int] = []
         for seq in sorted(self.active.values(), key=lambda s: s.birth):
             if self.active.get(seq.slot) is not seq:
                 continue               # already preempted by an older row
-            while not self.tables.grow(seq.slot):
+            while not self.tables.prepare_write(seq.slot):
                 victim = max(self.active.values(), key=lambda s: s.birth)
                 self.preempt(victim)
                 preempted.append(victim.request.rid)
@@ -199,8 +240,15 @@ class Scheduler:
         block whose last position ``(blk+1)·ps - 1 <= prompt_len - window``
         is out of the window before it is ever read (the same horizon
         ``reclaim`` uses).  Prefill attention reads the in-row activations,
-        not the cache, so those blocks' writes can go straight to trash."""
-        if not self.lazy or self.window is None:
+        not the cache, so those blocks' writes can go straight to trash.
+
+        That justification only holds for whole-prompt in-row prefill:
+        chunked and prefix-hit suffix spans attend through the *cache*, and
+        a suffix query just above the skipped region still reaches into it
+        (its window spans positions below ``prompt_len - window``), so with
+        sharing or chunking enabled every prompt block gets a real page."""
+        if not self.lazy or self.window is None \
+                or self.share_prefix or self.chunked:
             return 0
         ps = self.cfg.page_size
         n_blocks = self.cfg.pages_for(prompt_len)
@@ -219,11 +267,15 @@ class Scheduler:
             slot = free[0]
             need = req.prompt_len if self.lazy else req.budget_tokens
             if not self.tables.admit(slot, need,
-                                     self._first_live_block(req.prompt_len)):
+                                     self._first_live_block(req.prompt_len),
+                                     tokens=req.tokens):
                 break  # pool exhausted — keep arrival order, wait for pages
             self.waiting.popleft()
             free.pop(0)
-            seq = ActiveSeq(request=req, slot=slot, birth=self._births)
+            hist = self.tables.hist.get(slot, 0)
+            seq = ActiveSeq(request=req, slot=slot, birth=self._births,
+                            prefilled=hist)
+            self.prefill_skipped += hist
             self._births += 1
             self.active[slot] = seq
             admitted.append(seq)

@@ -1,0 +1,426 @@
+"""Prefix caching + copy-on-write pages + chunked prefill.
+
+The load-bearing contracts:
+* allocator safety: double frees and trash frees raise (a page freed twice
+  used to be handed to two slots, silently aliasing their KV); refcounts
+  track block-table aliases exactly; retained ref-0 pages park in a cached
+  LRU ring and are revived by hits or evicted (with the index notified)
+  when the free list runs dry;
+* the prefix index chains digests, so a block hit certifies the whole
+  prefix through that block — equal tokens at equal absolute positions;
+* admission aliases matched blocks onto existing pages (capped one token
+  short of the full prompt, so prefill always emits last-token logits) and
+  the first divergent write to a shared page copy-on-writes it;
+* conservation under randomized admit/grow/preempt/reclaim/release churn:
+  free + cached + allocated == usable, refcounts == ownership entries,
+  trash pages never owned — with and without sharing;
+* scheduler-level validation: empty prompts, duplicate rids and
+  never-admissible budgets are rejected at submit (direct scheduler users
+  used to be able to queue a request that deadlocks the serve loop);
+* end to end: a shared-prefix trace generates bit-identically to the
+  no-sharing engine while processing fewer prefill tokens and allocating
+  fewer pages — including under lazy admission with forced preemption and
+  poisoned reclaimed pages — and chunked prefill (budget < prompt_len) is
+  token-identical to unchunked.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import (BlockTables, PageAllocator, PagedCacheConfig,
+                           PrefixIndex, Request, Scheduler, TRASH_PAGE)
+
+
+# ---------------------------------------------------------------------------
+# allocator: refcounts, double-free guard, cached ring
+# ---------------------------------------------------------------------------
+
+def test_allocator_double_free_raises():
+    """The silent-corruption bug: freeing a page twice used to hand it to
+    two slots.  Now every page carries a refcount and over-freeing raises."""
+    a = PageAllocator(num_pages=6)
+    got = a.alloc(2)
+    a.free(got)
+    with pytest.raises(ValueError):
+        a.free([got[0]])                      # double free
+    with pytest.raises(ValueError):
+        a.free([TRASH_PAGE])                  # trash is never allocated
+    with pytest.raises(ValueError):
+        a.free([5])                           # never handed out at all
+
+
+def test_allocator_refcounts_and_shared_free():
+    a = PageAllocator(num_pages=6)
+    (p,) = a.alloc(1)
+    assert a.refcount(p) == 1
+    a.share(p)
+    a.share(p)
+    assert a.refcount(p) == 3 and a.refs_total == 3
+    assert a.free([p]) == [] and a.refcount(p) == 2   # alias dropped, alive
+    assert a.free([p]) == []
+    assert a.free([p]) == [p]                 # last reference frees for real
+    with pytest.raises(ValueError):
+        a.free([p])
+    with pytest.raises(ValueError):
+        a.share(p)                            # free pages cannot be shared
+
+
+def test_allocator_cached_ring_revival_and_lru_eviction():
+    evicted = []
+    a = PageAllocator(num_pages=6)            # pages 1..5
+    a.on_evict = evicted.append
+    got = a.alloc(3)                          # 1, 2, 3
+    a.free([got[0]], retain=frozenset([got[0]]))     # park 1 (oldest)
+    a.free([got[1]], retain=frozenset([got[1]]))     # park 2
+    assert a.num_free == 2 and a.num_cached == 2 and a.num_allocated == 1
+    a.share(got[1])                           # prefix hit revives page 2
+    assert a.revivals == 1 and a.num_cached == 1 and a.refcount(got[1]) == 1
+    # alloc beyond the free list: the LRU cached page is evicted, hook fires
+    pages = a.alloc(3)
+    assert pages is not None and got[0] in pages and evicted == [got[0]]
+    assert a.num_free == 0 and a.num_cached == 0
+    assert a.alloc(1) is None                 # nothing left, no side effect
+    # conservation at every point above: free + cached + allocated == 5
+    assert a.num_free + a.num_cached + a.num_allocated == 5
+
+
+# ---------------------------------------------------------------------------
+# prefix index: chained digests
+# ---------------------------------------------------------------------------
+
+def test_prefix_index_chained_digests():
+    idx = PrefixIndex(page_size=4)
+    a = np.arange(10, dtype=np.int32)               # blocks: 4, 4, partial 2
+    b = np.concatenate([a[:8], [99, 9]]).astype(np.int32)
+    da, db = idx.block_digests(a), idx.block_digests(b)
+    assert len(da) == 3
+    assert da[0] == db[0] and da[1] == db[1]        # shared full blocks
+    assert da[2] != db[2]                           # tails differ
+    # chaining: a different *first* block changes every later digest even
+    # when the later tokens are identical
+    c = np.concatenate([[77], a[1:]]).astype(np.int32)
+    dc = idx.block_digests(c)
+    assert dc[1] != da[1] and dc[2] != da[2]
+    # a shorter identical tail hashes differently from a longer one
+    assert idx.block_digests(a[:9])[2] != da[2]
+    # register / lookup / forget round-trip; first writer wins
+    assert idx.register(da[0], 7)
+    assert not idx.register(da[0], 8)               # digest taken
+    assert not idx.register(da[1], 7)               # page taken
+    assert idx.lookup(da[0]) == 7 and idx.registered(7)
+    idx.forget(7)
+    assert idx.lookup(da[0]) is None and len(idx) == 0
+
+
+# ---------------------------------------------------------------------------
+# block tables: admission sharing + copy-on-write
+# ---------------------------------------------------------------------------
+
+def _shared_tables():
+    cfg = PagedCacheConfig(page_size=4, num_pages=17, max_batch=3,
+                           max_pages_per_seq=4)
+    return cfg, BlockTables(cfg, share_prefix=True)
+
+
+def test_admit_shares_matched_blocks_and_caps_last_token():
+    cfg, bt = _shared_tables()
+    prompt = np.arange(12, dtype=np.int32)          # 3 full blocks
+    assert bt.admit(0, n_tokens=12, tokens=prompt)
+    assert bt.hist[0] == 0                          # cold index: no match
+    bt.kv_len[0] = 12
+    bt.register_prefilled(0, 12)
+    # identical prompt: all 3 blocks match, but the match is capped at 11
+    # tokens so prefill still emits the last token's logits
+    assert bt.admit(1, n_tokens=12, tokens=prompt)
+    assert bt.hist[1] == 11
+    assert np.array_equal(bt.tables[1, :3], bt.tables[0, :3])
+    assert all(bt.allocator.refcount(int(p)) == 2 for p in bt.tables[0, :3])
+    # slot 1's write block (token 11 → block 2) is shared → COW
+    free_before = bt.allocator.num_free
+    assert bt.prepare_write(1)
+    assert bt.tables[1, 2] != bt.tables[0, 2]       # rewritten to a fresh page
+    assert bt.allocator.refcount(int(bt.tables[0, 2])) == 1
+    assert bt.cow_copies == 1 and bt.allocator.num_free == free_before - 1
+    pairs = bt.drain_copies()
+    assert pairs == [(int(bt.tables[0, 2]), int(bt.tables[1, 2]))]
+    assert bt.drain_copies() == []                  # drained exactly once
+    # a diverging prompt shares only the common full blocks
+    other = np.concatenate([prompt[:8], [77, 78, 79, 80]]).astype(np.int32)
+    assert bt.admit(2, n_tokens=12, tokens=other)
+    assert bt.hist[2] == 8
+    assert np.array_equal(bt.tables[2, :2], bt.tables[0, :2])
+    assert bt.tables[2, 2] not in (bt.tables[0, 2], bt.tables[1, 2])
+    # conservation with sharing: refcounts == ownership entries
+    owned_entries = sum(len(m) for m in bt._owned.values())
+    assert bt.allocator.refs_total == owned_entries
+
+
+def test_release_retains_indexed_pages_for_revival():
+    cfg, bt = _shared_tables()
+    prompt = np.arange(12, dtype=np.int32)
+    assert bt.admit(0, n_tokens=12, tokens=prompt)
+    bt.kv_len[0] = 12
+    bt.register_prefilled(0, 12)
+    pages = [int(p) for p in bt.tables[0, :3]]
+    assert bt.release(0) == []                      # indexed → cached, not freed
+    assert bt.allocator.num_cached == 3
+    # the next identical prompt revives the cached pages without compute
+    assert bt.admit(1, n_tokens=12, tokens=prompt)
+    assert bt.hist[1] == 11 and [int(p) for p in bt.tables[1, :3]] == pages
+    assert bt.allocator.revivals == 3 and bt.allocator.num_cached == 0
+
+
+# ---------------------------------------------------------------------------
+# randomized conservation fuzz (satellite: scheduler/allocator invariants)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("share", [False, True])
+def test_randomized_conservation(share):
+    """Random admit/grow(prepare_write)/decode/preempt/reclaim/release churn
+    keeps the pool conserved: free + cached + allocated == usable pages,
+    refcounts == block-table ownership entries, trash pages never owned,
+    and without sharing no page backs two table entries."""
+    cfg = PagedCacheConfig(page_size=4, num_pages=12, max_batch=3,
+                           max_pages_per_seq=5)
+    rs = np.random.RandomState(7)
+    sched = Scheduler(cfg, lazy=True, share_prefix=share)
+    alloc = sched.tables.allocator
+    # a small prompt vocabulary makes repeated prefixes (and so sharing,
+    # retention and revival) actually happen
+    prompts = [rs.randint(0, 5, size=n).astype(np.int32)
+               for n in (4, 7, 9, 12)]
+    next_rid = 0
+
+    def check():
+        tables = sched.tables
+        owned_pages = [p for m in tables._owned.values() for p in m.values()]
+        assert alloc.num_free + alloc.num_cached + alloc.num_allocated \
+            == cfg.usable_pages
+        assert alloc.refs_total == len(owned_pages)
+        assert not (set(owned_pages) & set(cfg.trash_pages))
+        if not share:
+            assert len(owned_pages) == len(set(owned_pages))
+        for slot, m in tables._owned.items():
+            for blk, page in m.items():
+                assert tables.tables[slot, blk] == page
+
+    for step in range(400):
+        op = rs.randint(5)
+        if op == 0 and len(sched.waiting) < 4:
+            p = prompts[rs.randint(len(prompts))]
+            sched.submit(Request(rid=next_rid, tokens=p.copy(),
+                                 max_new_tokens=int(rs.randint(1, 6))))
+            next_rid += 1
+        elif op == 1:
+            for seq in sched.admit():
+                # emulate the engine: the prompt becomes resident
+                seq.prefilled = seq.request.prompt_len
+                sched.tables.kv_len[seq.slot] = seq.request.prompt_len
+                sched.tables.register_prefilled(seq.slot, seq.prefilled)
+                seq.generated.append(int(rs.randint(5)))
+        elif op == 2 and sched.active:
+            sched.ensure_growth()
+            sched.tables.drain_copies()
+            # decode one token on every grown, still-running row
+            for seq in list(sched.active.values()):
+                if not seq.prefilling and not seq.done \
+                        and sched.tables.append_dest_ok(seq.slot):
+                    sched.tables.kv_len[seq.slot] += 1
+                    seq.generated.append(int(rs.randint(5)))
+        elif op == 3 and sched.active:
+            for slot in list(sched.active):
+                sched.tables.reclaim_out_of_window(slot, window=6)
+        elif op == 4:
+            sched.evict_finished()
+        check()
+    # drain: release everything; cached pages are the only residue
+    for seq in list(sched.active.values()):
+        sched.preempt(seq)
+    check()
+    assert alloc.num_allocated == 0
+    assert alloc.num_free + alloc.num_cached == cfg.usable_pages
+    if not share:
+        assert alloc.num_cached == 0
+
+
+# ---------------------------------------------------------------------------
+# scheduler submit validation (satellites: moved checks + duplicate rids)
+# ---------------------------------------------------------------------------
+
+def test_scheduler_submit_validation():
+    cfg = PagedCacheConfig(page_size=4, num_pages=6, max_batch=2,
+                           max_pages_per_seq=8)     # 5 usable pages, wide rows
+    sched = Scheduler(cfg)
+    with pytest.raises(ValueError, match="empty prompt"):
+        sched.submit(Request(rid=0, tokens=np.zeros(0, np.int32),
+                             max_new_tokens=2))
+    # fits max_seq_len (32) but not the pool (needs 6 > 5 usable pages):
+    # used to be accepted and spin the serve loop forever
+    with pytest.raises(ValueError, match="pool"):
+        sched.submit(Request(rid=0, tokens=np.zeros(20, np.int32),
+                             max_new_tokens=4))
+    sched.submit(Request(rid=0, tokens=np.zeros(4, np.int32),
+                         max_new_tokens=2))
+    with pytest.raises(ValueError, match="already submitted"):
+        sched.submit(Request(rid=0, tokens=np.zeros(4, np.int32),
+                             max_new_tokens=2))
+    sched.submit(Request(rid=1, tokens=np.zeros(4, np.int32),
+                         max_new_tokens=2))         # fresh rid still fine
+
+
+# ---------------------------------------------------------------------------
+# end to end (jitted smoke model)
+# ---------------------------------------------------------------------------
+
+def _smoke_cfg():
+    from repro import configs
+    return dataclasses.replace(configs.smoke_config("qwen3_14b"),
+                               dtype=jnp.float32, remat=False)
+
+
+def _shared_prefix_trace(cfg, rs):
+    """Wave 1 (cold): a prompt and a same-prefix sibling.  Wave 2: two exact
+    duplicates of the first prompt — admitted together they alias the same
+    blocks at refcount 2, so the first one's write COWs."""
+    prefix = rs.randint(0, cfg.vocab_size, size=9).astype(np.int32)
+    suf_a = rs.randint(0, cfg.vocab_size, size=3).astype(np.int32)
+    suf_b = rs.randint(0, cfg.vocab_size, size=3).astype(np.int32)
+    cold = np.concatenate([prefix, suf_a])
+    return [(cold, 4), (np.concatenate([prefix, suf_b]), 4),
+            (cold.copy(), 4), (cold.copy(), 4)]
+
+
+def test_engine_duplicate_rid_rejected():
+    from repro.models import lm
+    from repro.serving import ServingEngine
+
+    cfg = _smoke_cfg()
+    params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
+    pcfg = PagedCacheConfig(page_size=8, num_pages=8, max_batch=2,
+                            max_pages_per_seq=3)
+    eng = ServingEngine(cfg, pcfg, params, impl="xla", prefill_len=16)
+    prompt = np.arange(4, dtype=np.int32)
+    assert eng.submit(prompt, 2, rid=5) == 5
+    with pytest.raises(ValueError, match="already submitted"):
+        eng.submit(prompt, 2, rid=5)                # caller-supplied dup
+    assert eng.submit(prompt, 2) == 6               # auto rids skip past it
+
+
+def test_engine_prefix_sharing_matches_and_skips_work():
+    """A shared-prefix trace under share_prefix=True generates bit-identically
+    to the no-sharing engine while prefilling fewer tokens and allocating
+    fewer pages; the exact-duplicate prompt exercises full-match capping and
+    the COW of its shared write block."""
+    from repro.models import lm
+    from repro.serving import ServingEngine
+
+    cfg = _smoke_cfg()
+    params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = _shared_prefix_trace(cfg, np.random.RandomState(2))
+    pcfg = PagedCacheConfig(page_size=4, num_pages=25, max_batch=2,
+                            max_pages_per_seq=5)
+
+    def run(**kw):
+        eng = ServingEngine(cfg, pcfg, params, impl="xla", prefill_len=16,
+                            xla_chunk=16, **kw)
+        out, stats = eng.run(list(reqs))
+        alloc = eng.scheduler.tables.allocator
+        # drained: nothing allocated; only index-retained pages linger
+        assert alloc.num_allocated == 0
+        assert alloc.num_free + alloc.num_cached == pcfg.usable_pages
+        return out, stats
+
+    out_ref, st_ref = run()
+    out_sh, st_sh = run(share_prefix=True)
+    assert set(out_ref) == set(out_sh)
+    for rid in out_ref:
+        assert np.array_equal(out_sh[rid], out_ref[rid]), \
+            f"request {rid}: shared {out_sh[rid]} != baseline {out_ref[rid]}"
+    # reuse actually happened, proportionally to the shared prefix: wave 1
+    # is cold (index empty), each wave-2 duplicate of the 12-token prompt
+    # skips all but its final token and aliases all 3 prompt blocks
+    assert st_ref["prefill_tokens_skipped"] == 0
+    assert st_sh["prefill_tokens_skipped"] == 11 + 11
+    assert st_sh["prefill_tokens"] \
+        == st_ref["prefill_tokens"] - st_sh["prefill_tokens_skipped"]
+    assert st_sh["pages_shared"] == 3 + 3
+    assert st_sh["pages_allocated"] < st_ref["pages_allocated"]
+    # the duplicates' write block (token 11) lands in a block both alias at
+    # refcount 2: the first writer COWs, the second then owns it exclusively
+    assert st_sh["cow_copies"] == 1
+    assert st_sh["pages_grown"] == st_ref["pages_grown"]
+
+
+def test_engine_sharing_lazy_preempt_poison_identical():
+    """Sharing composes with the whole pressure stack: lazy admission over a
+    pool tight enough to force preemptions, sliding-window reclamation with
+    poisoned freed pages, and prefix revival of a finished request's pages.
+    Generations must stay bit-identical to the unshared engine."""
+    from repro.models import lm
+    from repro.serving import ServingEngine
+
+    cfg = dataclasses.replace(_smoke_cfg(), attn_window=10)
+    params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rs = np.random.RandomState(4)
+    prefix = rs.randint(0, cfg.vocab_size, size=8).astype(np.int32)
+    reqs = [(np.concatenate([prefix, rs.randint(
+        0, cfg.vocab_size, size=n).astype(np.int32)]), g)
+        for n, g in [(3, 9), (1, 7), (3, 8)]]
+    # 6 usable pages: wave 1's two prompts reserve all of them, so the first
+    # page-boundary crossing before reclamation catches up must preempt
+    pcfg = PagedCacheConfig(page_size=4, num_pages=7, max_batch=2,
+                            max_pages_per_seq=6)
+
+    def run(**kw):
+        eng = ServingEngine(cfg, pcfg, params, impl="xla", prefill_len=24,
+                            xla_chunk=16, lazy=True, poison_reclaimed=True,
+                            **kw)
+        return eng.run(list(reqs))
+
+    out_ref, st_ref = run()
+    out_sh, st_sh = run(share_prefix=True)
+    assert st_sh["preemptions"] >= 1            # pressure bit with sharing on
+    assert st_sh["pages_reclaimed"] > 0
+    assert st_sh["prefill_tokens_skipped"] > 0  # ...and sharing still engaged
+    assert set(out_ref) == set(out_sh)
+    for rid in out_ref:
+        assert np.array_equal(out_sh[rid], out_ref[rid]), \
+            f"request {rid}: shared {out_sh[rid]} != baseline {out_ref[rid]}"
+
+
+def test_engine_chunked_prefill_token_identical():
+    """prefill_chunk < prompt_len splits prompts into spans interleaved with
+    decode steps; greedy generations match the unchunked engine exactly, and
+    the long prompt visibly overlaps other rows' decoding."""
+    from repro.models import lm
+    from repro.serving import ServingEngine
+
+    cfg = _smoke_cfg()
+    params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rs = np.random.RandomState(5)
+    reqs = [(rs.randint(0, cfg.vocab_size, size=14).astype(np.int32), 5),
+            (rs.randint(0, cfg.vocab_size, size=4).astype(np.int32), 7),
+            (rs.randint(0, cfg.vocab_size, size=9).astype(np.int32), 3)]
+    pcfg = PagedCacheConfig(page_size=4, num_pages=20, max_batch=3,
+                            max_pages_per_seq=5)
+
+    def run(**kw):
+        eng = ServingEngine(cfg, pcfg, params, impl="xla", prefill_len=16,
+                            xla_chunk=16, **kw)
+        return eng.run(list(reqs))
+
+    out_ref, st_ref = run()
+    out_ch, st_ch = run(prefill_chunk=5)
+    assert st_ch["prefill_tokens"] == st_ref["prefill_tokens"] == 14 + 4 + 9
+    assert set(out_ref) == set(out_ch)
+    for rid in out_ref:
+        assert np.array_equal(out_ch[rid], out_ref[rid]), \
+            f"request {rid}: chunked {out_ch[rid]} != unchunked {out_ref[rid]}"
+    # chunking + sharing compose: the same trace, both features on
+    out_both, st_both = run(prefill_chunk=5, share_prefix=True)
+    for rid in out_ref:
+        assert np.array_equal(out_both[rid], out_ref[rid])
