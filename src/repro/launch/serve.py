@@ -21,6 +21,11 @@ prompts with decode steps):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_14b --smoke \\
       --paged --share-prefix --prefill-chunk 32 --requests 8 --gen 32
 
+Speculative decoding (prompt-lookup drafts verified k+1 tokens at a time;
+repetitive synthetic prompts make the n-gram drafter actually land):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3_14b --smoke \\
+      --paged --speculate 4 --requests 8 --gen 32
+
 Distributed paged serving (page pool sharded over the mesh's model axis;
 needs that many devices, e.g. XLA_FLAGS=--xla_force_host_platform_device_count=2):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_14b --smoke \\
@@ -74,6 +79,10 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="--paged: max prompt tokens prefilled per engine "
                          "iteration (0 = whole prompts at once)")
+    ap.add_argument("--speculate", type=int, default=0,
+                    help="--paged: speculative decoding — verify up to this "
+                         "many prompt-lookup draft tokens per decode step "
+                         "(0 = off); token-identical to plain greedy decode")
     ap.add_argument("--num-splits", type=int, default=0,
                     help="split-KV decode: parallel KV partitions per "
                          "(batch, kv-head) row (0 = 1, or autotuned with "
@@ -172,7 +181,8 @@ def serve_paged(cfg, args, mesh=None):
                         num_splits=args.num_splits or None,
                         autotune=args.autotune,
                         share_prefix=args.share_prefix,
-                        prefill_chunk=args.prefill_chunk or None)
+                        prefill_chunk=args.prefill_chunk or None,
+                        speculate_k=args.speculate or None)
     if args.autotune or args.num_splits:
         print(f"decode num_splits: {eng.num_splits}"
               + (" (autotuned)" if args.autotune and not args.num_splits
@@ -185,7 +195,13 @@ def serve_paged(cfg, args, mesh=None):
     for _ in range(args.requests):  # ragged: 25%..100% of the nominal lengths
         plen = int(rs.randint(max(1, args.prompt_len // 4), args.prompt_len + 1))
         gen = int(rs.randint(max(1, args.gen // 4), args.gen + 1))
-        tail = rs.randint(0, cfg.vocab_size, size=plen)
+        if args.speculate:
+            # a tiled motif gives the prompt-lookup drafter n-gram repeats
+            # to match against (uniform-random prompts rarely draft at all)
+            motif = rs.randint(0, cfg.vocab_size, size=8)
+            tail = np.tile(motif, -(-plen // 8))[:plen]
+        else:
+            tail = rs.randint(0, cfg.vocab_size, size=plen)
         reqs.append((np.concatenate([system, tail])[:pcfg.max_seq_len
                                                     - args.gen - 1], gen))
     out, stats = eng.run(reqs)
@@ -202,6 +218,12 @@ def serve_paged(cfg, args, mesh=None):
               f"prefilled, {stats['prefill_tokens_skipped']:.0f} skipped via "
               f"prefix hits, {stats['pages_shared']:.0f} page aliases, "
               f"{stats['cow_copies']:.0f} copy-on-writes")
+    if args.speculate:
+        print(f"speculation: {stats['drafted_tokens']:.0f} tokens drafted, "
+              f"{stats['accepted_tokens']:.0f} accepted "
+              f"({stats['acceptance_rate']:.1%}), "
+              f"{stats['generated_tokens'] / max(stats['decode_steps'], 1):.2f} "
+              f"tokens/verify step")
     print("generated (request 0):", out[0][:16])
 
 

@@ -328,11 +328,13 @@ def apply_attention(p, x, ctx: Ctx, cfg, *, positions=None, cache=None,
                     from repro.distributed.paged import paged_decode_sharded
                     o_tok = paged_decode_sharded(
                         q_tok, ck, cv, bt_tok, kvl_tok, mesh=ctx.mesh,
-                        impl=ctx.impl, window=paged_decode_window(cfg))
+                        impl=ctx.impl, window=paged_decode_window(cfg),
+                        num_splits=ctx.num_splits)
                 else:
                     o_tok = spark_paged_decode(
                         q_tok, ck, cv, bt_tok, kvl_tok, impl=ctx.impl,
-                        window=paged_decode_window(cfg))
+                        window=paged_decode_window(cfg),
+                        num_splits=ctx.num_splits)
                 o = o_tok.reshape(b, s, hq, hd).transpose(0, 2, 1, 3)
                 o = ctx.c(o, "batch", "heads", "seq_full", "head_dim")
                 out = o.transpose(0, 2, 1, 3).reshape(b, s, hq * hd) @ p["wo"]

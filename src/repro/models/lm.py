@@ -423,6 +423,35 @@ def paged_chunk_prefill(cfg, params, ctx: Ctx, tokens, positions, dest,
     return logits, caches
 
 
+def paged_verify_step(cfg, params, ctx: Ctx, tokens, positions, dest,
+                      token_tables, token_kv_len, caches):
+    """Speculative verify: score ``k + 1`` tokens per decode row in ONE
+    forward call — the row's current last token plus its ``k`` drafted
+    continuations — amortizing the per-step weight/KV HBM reads over up to
+    ``k + 1`` emitted tokens.
+
+    Inputs mirror :func:`paged_chunk_prefill` with ``[B = max_batch,
+    W = k + 1]`` rows instead of packed prompt spans: tokens/positions
+    ``[B, W]`` (global positions ``kv_len .. kv_len + k``), dest ``[B, W]``
+    flat page-pool scatter slots (draft padding and masked rows → the trash
+    page), token_tables ``[B, W, T]``, token_kv_len ``[B, W]`` =
+    ``position + 1`` for live tokens and 0 for padding.  Each layer scatters
+    all drafted K/V first, then every token attends through its own
+    block-table row at its absolute position — drafted queries see the
+    drafted keys before them, which is exactly the conditioning greedy
+    acceptance needs (serving/drafter.py ``longest_accept``).
+
+    The host accepts the longest draft prefix matching the per-position
+    argmaxes and advances ``kv_len`` past it; rejected drafts' scatter
+    writes are rolled back *logically* — they sit at positions ``>= kv_len``
+    which every kernel read gates out, and the next step re-scatters those
+    positions before ``kv_len`` ever covers them (docs/serving.md spells
+    out the invariant).  Returns (logits [B, W, Vpad], caches).
+    """
+    return paged_chunk_prefill(cfg, params, ctx, tokens, positions, dest,
+                               token_tables, token_kv_len, caches)
+
+
 def paged_decode_step(cfg, params, ctx: Ctx, token, caches, block_tables,
                       kv_len):
     """One decode step over the paged cache. token [B] int32, block_tables

@@ -143,6 +143,7 @@ class ServeArtifacts:
     rules: Optional[ShardingRules]          # prefill/param rules
     rules_decode: Optional[ShardingRules] = None
     chunk_prefill_fn: Any = None            # paged only: chunked/suffix prefill
+    verify_fn: Any = None                   # paged only: speculative verify-k
 
 
 def make_serve_steps(cfg, *, mesh=None, impl: str = "xla", max_len: int = 2048,
@@ -165,6 +166,13 @@ def make_serve_steps(cfg, *, mesh=None, impl: str = "xla", max_len: int = 2048,
           → (logits [B,S,Vpad], caches)     # chunked/suffix prefill spans
                                             # (global positions; per-token
                                             # block-table attention)
+      verify_fn(params, tokens, positions, dest, token_tables,
+                token_kv_len, caches)
+          → (logits [B,W,Vpad], caches)     # speculative verify-k: same
+                                            # per-token primitive, B =
+                                            # max_batch decode rows of
+                                            # width W = k+1, decode-path
+                                            # sharding rules + num_splits
 
     num_splits / block_kv: split-KV launch parameters for the decode step
     (static — baked into the jitted step; pick both with perf/autotune.py or
@@ -221,6 +229,17 @@ def make_serve_steps(cfg, *, mesh=None, impl: str = "xla", max_len: int = 2048,
                                           dest, token_tables, token_kv_len,
                                           caches)
 
+        def verify_fn(params, tokens, positions, dest, token_tables,
+                      token_kv_len, caches):
+            # decode-path rules + split-KV launch params: the verify step is
+            # the latency-bound step it replaces, just k+1 tokens wide
+            ctx = _make_ctx(cfg, rules_dec, impl, 0, True, xla_chunk=xla_chunk,
+                            decode_write=decode_write, mesh=mesh,
+                            num_splits=num_splits)
+            return lm.paged_verify_step(cfg, params, ctx, tokens, positions,
+                                        dest, token_tables, token_kv_len,
+                                        caches)
+
         # all steps donate the page pools (the dominant serving tensors):
         # the caller always threads the returned caches into the next call
         return ServeArtifacts(prefill_fn=jax.jit(prefill_fn,
@@ -228,6 +247,7 @@ def make_serve_steps(cfg, *, mesh=None, impl: str = "xla", max_len: int = 2048,
                               decode_fn=jax.jit(decode_fn, donate_argnums=(2,)),
                               chunk_prefill_fn=jax.jit(chunk_prefill_fn,
                                                        donate_argnums=(6,)),
+                              verify_fn=jax.jit(verify_fn, donate_argnums=(6,)),
                               cache_init_fn=cache_init, rules=rules,
                               rules_decode=rules_dec)
 

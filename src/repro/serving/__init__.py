@@ -11,6 +11,9 @@ idea, built on this repo's scalar-prefetch ragged-skip machinery):
                      index, block tables (per-block ownership: lazy growth,
                      out-of-window reclamation, prefix sharing with
                      copy-on-write), scatter math.
+* ``drafter``      — prompt-lookup (n-gram) draft proposer + the greedy
+                     longest-prefix acceptance rule for speculative decoding
+                     (``ServingEngine(speculate_k=...)``); no second model.
 * ``scheduler``    — FCFS continuous batching as an admission → grow →
                      preempt → re-prefill state machine: eager (full-budget
                      reservation) or lazy (prompt-only admission, one-page
@@ -32,6 +35,7 @@ lives in ``distributed/paged.py`` — pass ``mesh=`` to the engine/steps.
 See docs/serving.md for the design and a quickstart.
 """
 
+from repro.serving.drafter import NgramDrafter, longest_accept
 from repro.serving.engine import ServingEngine
 from repro.serving.paged_cache import (BlockTables, PageAllocator,
                                        PagedCacheConfig, PrefixIndex,
@@ -41,4 +45,5 @@ from repro.serving.scheduler import ActiveSeq, Request, Scheduler
 __all__ = [
     "ServingEngine", "BlockTables", "PageAllocator", "PagedCacheConfig",
     "PrefixIndex", "TRASH_PAGE", "ActiveSeq", "Request", "Scheduler",
+    "NgramDrafter", "longest_accept",
 ]

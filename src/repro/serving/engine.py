@@ -37,10 +37,27 @@ row (``chunk_prefill_fn``), which also serves prefix-cache hits: a matched
 prompt just prefills its unmatched suffix the same way.  Greedy decode makes
 chunked runs token-identical to unchunked ones.
 
+Speculative decoding (``speculate_k=``): between steps a prompt-lookup
+drafter (serving/drafter.py) proposes up to ``k`` continuation tokens per
+decode row from its own token history; the decode step is then replaced by a
+verify step that scores all ``k + 1`` positions (current token + drafts) in
+one model call through the same per-token paged-attention primitive chunked
+prefill uses.  The longest draft prefix matching the model's own greedy
+argmaxes is accepted — plus the model's token at the first mismatch — so
+each verify call emits 1 to ``k + 1`` tokens and advances ``kv_len`` by as
+many, growing/COW-ing every page the multi-token write touches *before* the
+step (``ensure_growth(k + 1)``).  Rejected drafts' K/V writes are rolled
+back logically: they sit at positions ``>= kv_len``, which every kernel read
+gates out, and the next verify re-scatters those positions before ``kv_len``
+ever covers them.  Greedy acceptance makes the generation token-identical to
+plain single-step decode by construction (the composition matrix in
+tests/test_speculative.py pins this across every serving feature).
+
 The jitted steps see fixed shapes only — [B=max_batch] decode rows, packed
-prefill rows of ``prefill_len`` — so the whole ragged, churning workload runs
-on exactly two compilations; growth/preemption/reclamation rewrite nothing
-but the tiny host-side block-table arrays re-shipped each step.
+prefill rows of ``prefill_len``, [B, k+1] verify rows — so the whole ragged,
+churning workload runs on a handful of compilations; growth/preemption/
+reclamation rewrite nothing but the tiny host-side block-table arrays
+re-shipped each step.
 
 Distributed serving: pass ``mesh=`` (with ``PagedCacheConfig.num_shards`` =
 the mesh's model-axis size) and the page pools shard page-aligned over the
@@ -62,6 +79,7 @@ import numpy as np
 
 from repro.models.layers import paged_decode_window
 from repro.runtime.steps import make_serve_steps
+from repro.serving.drafter import NgramDrafter, longest_accept
 from repro.serving.paged_cache import PagedCacheConfig, TRASH_PAGE
 from repro.serving.scheduler import ActiveSeq, Request, Scheduler
 
@@ -77,7 +95,8 @@ class ServingEngine:
                  poison_reclaimed: bool = False,
                  num_splits: Optional[int] = None, autotune: bool = False,
                  share_prefix: bool = False,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 speculate_k: Optional[int] = None):
         """lazy: admission policy (module docstring). reclaim: free
         fully-out-of-window pages each step — defaults to "whenever the arch
         has a sliding window"; pass False to pin pages for a model's whole
@@ -92,7 +111,11 @@ class ServingEngine:
         share_prefix: content-addressed prefix caching + copy-on-write pages
         (module docstring). prefill_chunk: max prompt tokens prefilled per
         engine iteration (None: whole prompts at once), interleaving long
-        prompts with decode steps."""
+        prompts with decode steps.
+        speculate_k: draft up to this many tokens per decode row with the
+        prompt-lookup drafter and verify them in one model call (module
+        docstring); None/0 turns speculation off.  Token-identical to plain
+        greedy decode under every admission/sharing/chunking mode."""
         assert cfg.causal, "serving needs an autoregressive arch"
         self.cfg = cfg
         self.pcfg = paged_cfg
@@ -112,6 +135,14 @@ class ServingEngine:
         if num_splits is None:
             num_splits = self._autotuned_splits() if autotune else 1
         self.num_splits = num_splits
+        if speculate_k is not None and speculate_k < 0:
+            raise ValueError("speculate_k must be a non-negative draft width")
+        self.speculate_k = int(speculate_k or 0)
+        self.drafter = (NgramDrafter(self.speculate_k)
+                        if self.speculate_k else None)
+        # with speculation on, a verify step can advance kv_len by up to
+        # k + 1 tokens, so every growth pass reserves that many positions
+        self._lookahead = self.speculate_k + 1
         arts = make_serve_steps(cfg, mesh=mesh, impl=impl, paged=paged_cfg,
                                 num_splits=num_splits,
                                 xla_chunk=min(xla_chunk, self.prefill_len))
@@ -127,6 +158,7 @@ class ServingEngine:
         self.prefill_fn = arts.prefill_fn
         self.decode_fn = arts.decode_fn
         self.chunk_prefill_fn = arts.chunk_prefill_fn
+        self.verify_fn = arts.verify_fn
         self.caches = arts.cache_init_fn()
         # the scheduler learns the window only when reclamation is on: with
         # reclaim=False pinned-pages runs keep the full-prefix reservation
@@ -139,6 +171,8 @@ class ServingEngine:
         self.util_samples: List[float] = []
         self.pool_samples: List[float] = []      # allocated / usable pages
         self.prefill_tokens = 0                  # prompt tokens run by prefill
+        self.drafted_tokens = 0                  # draft tokens sent to verify
+        self.accepted_tokens = 0                 # drafts the model agreed with
         self._next_rid = 0
 
     def _autotuned_splits(self) -> int:
@@ -349,6 +383,65 @@ class ServingEngine:
             tables.kv_len[slot] += 1
             seq.generated.append(int(logits[slot].argmax()))
 
+    def _decode_spec(self):
+        """One fixed-shape [B, k+1] verify step over all max_batch slots.
+
+        Each non-prefilling row carries its current token plus up to ``k``
+        prompt-lookup drafts at positions ``kv_len .. kv_len+k`` (per-token
+        causal visibility via ``token_kv_len``, exactly like a chunked
+        prefill span); mid-prefill and inactive rows pad with the trash
+        table, kv_len 0 and dest 0, so they neither read nor write real
+        pages.  After the step the longest draft prefix matching the model's
+        own greedy argmaxes is accepted (``longest_accept``) and ``kv_len``
+        advances by the emitted count — the K/V of rejected drafts stays in
+        owned pages at positions ``>= kv_len``, unreadable until the next
+        verify overwrites it.  Drafts are budget-capped so the write never
+        exceeds the positions ``ensure_growth(k + 1)`` reserved."""
+        sched = self.scheduler
+        tables = sched.tables
+        width = self.speculate_k + 1
+        tok = np.zeros((self.pcfg.max_batch, width), np.int32)
+        pos = np.zeros((self.pcfg.max_batch, width), np.int32)
+        kvl = np.zeros((self.pcfg.max_batch, width), np.int32)
+        ttab = np.full((self.pcfg.max_batch, width,
+                        self.pcfg.max_pages_per_seq), TRASH_PAGE, np.int32)
+        dest = np.zeros((self.pcfg.max_batch, width), np.int32)
+        drafts: Dict[int, np.ndarray] = {}
+        for slot, seq in sched.active.items():
+            if seq.prefilling:
+                continue
+            history = np.concatenate(
+                [seq.request.tokens, np.asarray(seq.generated, np.int32)])
+            room = seq.request.max_new_tokens - len(seq.generated)
+            draft = self.drafter.propose(history, max_tokens=room - 1)
+            m = len(draft) + 1
+            L = int(tables.kv_len[slot])
+            assert tables.append_dest_ok(slot, m), \
+                f"slot {slot}: verify write escaped its owned pages"
+            tok[slot, 0] = seq.generated[-1]
+            tok[slot, 1:m] = draft
+            pos[slot, :m] = L + np.arange(m)
+            kvl[slot, :m] = L + 1 + np.arange(m)
+            ttab[slot, :m] = tables.tables[slot]
+            dest[slot, :m] = tables.span_dest(slot, L, L + m)
+            drafts[slot] = draft
+            self.drafted_tokens += len(draft)
+        logits, self.caches = self.verify_fn(
+            self.params, jnp.asarray(tok), jnp.asarray(pos),
+            jnp.asarray(dest), jnp.asarray(ttab), jnp.asarray(kvl),
+            self.caches)
+        logits = np.asarray(logits[:, :, :self.cfg.vocab_size])
+        for slot, draft in drafts.items():
+            seq = sched.active[slot]
+            greedy = logits[slot, :len(draft) + 1].argmax(axis=-1)
+            accepted, emitted = longest_accept(draft, greedy)
+            self.accepted_tokens += accepted
+            eos = seq.request.eos_id
+            if eos is not None and eos in emitted:
+                emitted = emitted[:emitted.index(eos) + 1]
+            seq.generated.extend(emitted)
+            tables.kv_len[slot] += len(emitted)
+
     def _apply_cow(self):
         """Apply queued copy-on-write page copies to every layer's pools —
         always before the next device step reads the destination pages (the
@@ -392,14 +485,16 @@ class ServingEngine:
                     self._poison_pages(freed)
             n_pre = sched.preemptions
             if sched.active:
-                sched.ensure_growth()  # running rows claim write pages first
+                # running rows claim write pages first — the whole verify
+                # span at once under speculation (lookahead = k + 1)
+                sched.ensure_growth(self._lookahead)
                 self._apply_cow()
             admitted = sched.admit()
             if admitted:
                 # newly admitted rows may need a copy-on-write before their
                 # first prefill span (a shared partial-tail block, or the
                 # re-prefilled last token of a fully matched prompt)
-                sched.ensure_growth()
+                sched.ensure_growth(self._lookahead)
                 self._apply_cow()
             progressed = self._prefill_step()
             if progressed:
@@ -408,13 +503,16 @@ class ServingEngine:
                 # just-prefilled rows may sit exactly on a page boundary;
                 # this pass may preempt one of them (its prefill work
                 # survives in generated_prefix and resumes later)
-                sched.ensure_growth()
+                sched.ensure_growth(self._lookahead)
                 self._apply_cow()
             if any(not seq.prefilling for seq in sched.active.values()):
                 u = sched.tables.utilization()
                 self.util_samples.append(u["utilization"])
                 self.pool_samples.append(u["pool_fraction"])
-                self._decode()
+                if self.speculate_k:
+                    self._decode_spec()
+                else:
+                    self._decode()
                 steps += 1
             elif sched.waiting and not admitted and not progressed \
                     and sched.preemptions == n_pre:
@@ -449,5 +547,9 @@ class ServingEngine:
             "pages_shared": float(tables.pages_shared),
             "pages_allocated": float(tables.allocator.total_allocs),
             "cow_copies": float(tables.cow_copies),
+            "drafted_tokens": float(self.drafted_tokens),
+            "accepted_tokens": float(self.accepted_tokens),
+            "acceptance_rate": (self.accepted_tokens /
+                                max(self.drafted_tokens, 1)),
         }
         return out, stats

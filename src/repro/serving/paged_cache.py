@@ -435,19 +435,17 @@ class BlockTables:
         self.pages_shared += len(shared)
         return True
 
-    def grow(self, slot: int) -> bool:
-        """Ensure the next token's write block (``kv_len // page_size``) is
-        owned, allocating one page if it isn't.  Idempotent; returns False
-        (no side effect) when a page is needed but the pool is dry — the
-        scheduler's cue to preempt."""
-        blk = int(self.kv_len[slot]) // self.cfg.page_size
+    def _ensure_block(self, slot: int, blk: int) -> bool:
+        """Ensure one specific logical block is owned, allocating a page if
+        it isn't.  Idempotent; returns False (no side effect) when a page is
+        needed but the pool is dry — the scheduler's cue to preempt."""
         owned = self._owned[slot]
         if blk in owned:
             return True
         if blk >= self.cfg.max_pages_per_seq:
             raise ValueError(
-                f"slot {slot}: write position {int(self.kv_len[slot])} "
-                f"escapes the block-table capacity {self.cfg.max_seq_len}")
+                f"slot {slot}: write block {blk} escapes the block-table "
+                f"capacity {self.cfg.max_seq_len}")
         pages = self.allocator.alloc(1)
         if pages is None:
             return False
@@ -456,39 +454,57 @@ class BlockTables:
         self.pages_grown += 1
         return True
 
-    def prepare_write(self, slot: int) -> bool:
-        """Make the next token's write block both owned and exclusively
-        writable, copy-on-writing a shared page if needed.
+    def grow(self, slot: int) -> bool:
+        """Ensure the next token's write block (``kv_len // page_size``) is
+        owned, allocating one page if it isn't.  Idempotent; returns False
+        (no side effect) when a page is needed but the pool is dry — the
+        scheduler's cue to preempt."""
+        return self._ensure_block(slot,
+                                  int(self.kv_len[slot]) // self.cfg.page_size)
 
-        A missing write block *below* the row's highest owned block is a
-        window-skipped dead zone — mid-prefill writes there go to the trash
-        page by design, so nothing is allocated; a missing block above every
-        owned block is a genuine append and grows one page.  When the write
+    def prepare_write(self, slot: int, n: int = 1) -> bool:
+        """Make the blocks covering the next ``n`` token writes (positions
+        ``kv_len .. kv_len + n - 1``) owned and exclusively writable,
+        copy-on-writing shared pages as needed.
+
+        ``n = 1`` is the plain decode step; speculative decode passes
+        ``k + 1`` so one verify call can scatter a row's whole draft, which
+        may cross one or more page boundaries in a single step — every
+        boundary crossed grows one page.  A missing block *below* the row's
+        highest owned block is a window-skipped dead zone — mid-prefill
+        writes there go to the trash page by design, so nothing is
+        allocated; missing blocks above are genuine appends.  When a write
         block's page has refcount > 1 — a prefix-shared page this row is
         about to diverge from — the row moves to a fresh page: the device
         copy is queued in ``_pending_copies``, the table entry is rewritten,
         and the shared page loses one reference.  Returns False (pool dry)
-        as the scheduler's cue to preempt.
+        as the scheduler's cue to preempt; pages already granted for earlier
+        blocks of the range stay owned (they are the row's future write
+        blocks — release/preemption reclaims them like any owned page).
         """
+        assert n >= 1
         owned = self._owned[slot]
-        blk = int(self.kv_len[slot]) // self.cfg.page_size
-        if blk not in owned:
-            if owned and blk < max(owned):
-                return True    # window-skipped block: writes go to trash
-            if not self.grow(slot):
-                return False
-        page = owned.get(blk)
-        if page is not None and self.allocator.refcount(page) > 1:
-            fresh = self.allocator.alloc(1)
-            if fresh is None:
-                return False
-            retain = (frozenset([page]) if self.prefix is not None
-                      and self.prefix.registered(page) else frozenset())
-            self.allocator.free([page], retain=retain)
-            owned[blk] = fresh[0]
-            self.tables[slot, blk] = fresh[0]
-            self._pending_copies.append((slot, page, fresh[0]))
-            self.cow_copies += 1
+        ps = self.cfg.page_size
+        first = int(self.kv_len[slot]) // ps
+        last = (int(self.kv_len[slot]) + n - 1) // ps
+        for blk in range(first, last + 1):
+            if blk not in owned:
+                if owned and blk < max(owned):
+                    continue   # window-skipped block: writes go to trash
+                if not self._ensure_block(slot, blk):
+                    return False
+            page = owned.get(blk)
+            if page is not None and self.allocator.refcount(page) > 1:
+                fresh = self.allocator.alloc(1)
+                if fresh is None:
+                    return False
+                retain = (frozenset([page]) if self.prefix is not None
+                          and self.prefix.registered(page) else frozenset())
+                self.allocator.free([page], retain=retain)
+                owned[blk] = fresh[0]
+                self.tables[slot, blk] = fresh[0]
+                self._pending_copies.append((slot, page, fresh[0]))
+                self.cow_copies += 1
         return True
 
     def drain_copies(self) -> List[Tuple[int, int]]:
@@ -596,10 +612,14 @@ class BlockTables:
         pos = np.arange(start, end)
         return (self.tables[slot, pos // ps] * ps + pos % ps).astype(np.int32)
 
-    def append_dest_ok(self, slot: int) -> bool:
-        """Does the next token's write position fall inside an owned page?"""
-        blk = int(self.kv_len[slot]) // self.cfg.page_size
-        return blk in self._owned.get(slot, {})
+    def append_dest_ok(self, slot: int, n: int = 1) -> bool:
+        """Do the next ``n`` tokens' write positions all fall inside owned
+        pages?  (The decode/verify steps assert this before scattering.)"""
+        ps = self.cfg.page_size
+        first = int(self.kv_len[slot]) // ps
+        last = (int(self.kv_len[slot]) + n - 1) // ps
+        owned = self._owned.get(slot, {})
+        return all(blk in owned for blk in range(first, last + 1))
 
     def utilization(self) -> Dict[str, float]:
         """Live tokens vs. reserved page capacity — the admission-policy

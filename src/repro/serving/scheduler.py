@@ -203,8 +203,11 @@ class Scheduler:
             generated_prefix=req.generated_prefix + list(seq.generated)))
         self.preemptions += 1
 
-    def ensure_growth(self) -> List[int]:
-        """Guarantee every surviving active row owns its next write page.
+    def ensure_growth(self, n: int = 1) -> List[int]:
+        """Guarantee every surviving active row owns its next ``n`` write
+        pages' worth of positions (``n = 1``: plain decode; speculative
+        decode passes ``k + 1`` so one verify step can scatter a whole
+        draft, growing across page boundaries when the draft straddles one).
 
         Oldest rows grow first; when the pool is dry the *youngest* active
         sequence is preempted and the allocation retried — each preemption
@@ -221,12 +224,20 @@ class Scheduler:
         device copies right after).  Returns the preempted rids.  Eager
         mode owns every budget page up front, so growth is a no-op there
         (COW is not — with sharing on, even eager can preempt here).
+
+        The lookahead is capped per row at the tokens it can still write
+        before finishing (a nearly-done row must not reserve pages past its
+        budget — they could never be used and would shrink everyone else's
+        pool) and drops to 1 for mid-prefill rows, whose prompt pages were
+        all reserved at admission.
         """
         preempted: List[int] = []
         for seq in sorted(self.active.values(), key=lambda s: s.birth):
             if self.active.get(seq.slot) is not seq:
                 continue               # already preempted by an older row
-            while not self.tables.prepare_write(seq.slot):
+            n_row = 1 if seq.prefilling else max(1, min(
+                n, seq.request.max_new_tokens - len(seq.generated)))
+            while not self.tables.prepare_write(seq.slot, n_row):
                 victim = max(self.active.values(), key=lambda s: s.birth)
                 self.preempt(victim)
                 preempted.append(victim.request.rid)

@@ -180,8 +180,9 @@ def test_release_retains_indexed_pages_for_revival():
 
 @pytest.mark.parametrize("share", [False, True])
 def test_randomized_conservation(share):
-    """Random admit/grow(prepare_write)/decode/preempt/reclaim/release churn
-    keeps the pool conserved: free + cached + allocated == usable pages,
+    """Random admit / multi-token grow (speculative lookahead + partial
+    acceptance rollback) / decode / preempt / reclaim / release churn keeps
+    the pool conserved: free + cached + allocated == usable pages,
     refcounts == block-table ownership entries, trash pages never owned,
     and without sharing no page backs two table entries."""
     cfg = PagedCacheConfig(page_size=4, num_pages=12, max_batch=3,
@@ -223,14 +224,23 @@ def test_randomized_conservation(share):
                 sched.tables.register_prefilled(seq.slot, seq.prefilled)
                 seq.generated.append(int(rs.randint(5)))
         elif op == 2 and sched.active:
-            sched.ensure_growth()
+            # speculative lookahead: grow up to `look` positions at once,
+            # then advance each surviving row by a random accepted count
+            # m <= look — the un-advanced remainder is the rolled-back
+            # draft, whose already-granted pages must stay owned (reused by
+            # the next step) without ever double-allocating
+            look = int(rs.randint(1, 6))
+            sched.ensure_growth(look)
             sched.tables.drain_copies()
-            # decode one token on every grown, still-running row
             for seq in list(sched.active.values()):
-                if not seq.prefilling and not seq.done \
-                        and sched.tables.append_dest_ok(seq.slot):
-                    sched.tables.kv_len[seq.slot] += 1
-                    seq.generated.append(int(rs.randint(5)))
+                if seq.prefilling or seq.done:
+                    continue
+                room = seq.request.max_new_tokens - len(seq.generated)
+                m = int(rs.randint(1, min(look, room) + 1))
+                if sched.tables.append_dest_ok(seq.slot, m):
+                    sched.tables.kv_len[seq.slot] += m
+                    seq.generated.extend(
+                        int(rs.randint(5)) for _ in range(m))
         elif op == 3 and sched.active:
             for slot in list(sched.active):
                 sched.tables.reclaim_out_of_window(slot, window=6)

@@ -1,0 +1,653 @@
+"""Speculative decoding: drafter/acceptance properties + composition matrix.
+
+The load-bearing contracts:
+* the prompt-lookup drafter is deterministic, draws proposals from its own
+  history (always in-vocab), and matches a brute-force oracle of its spec
+  (longest n-gram first, most recent earlier match wins);
+* the greedy acceptance rule emits exactly what step-by-step greedy decode
+  would — fuzzed against a sequential oracle, including the k=0 degeneracy;
+* multi-token ``kv_len`` advances are safe: ``prepare_write(n)`` grows and
+  copy-on-writes every block a verify write touches (crossing page
+  boundaries), partial acceptance (the logical rollback) never leaks or
+  double-allocates pages, and a near-dry pool preempts mid-growth with the
+  already-granted pages conserved;
+* the composition matrix: the speculative engine is BIT-IDENTICAL to the
+  plain greedy engine — and to the contiguous-cache reference — across
+  {eager, lazy + forced preemption, prefix sharing + COW, chunked prefill,
+  sliding window + reclamation, num_splits > 1}; a slow-tier case repeats
+  it on a 2-way sharded mesh in a subprocess with fake CPU devices;
+* an oracle drafter with perfect foresight drives acceptance to 1.0, so the
+  multi-token acceptance path (page-boundary-crossing advances, fewer
+  verify steps) demonstrably runs — not just the 1-token fallback.
+"""
+
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import (NgramDrafter, PagedCacheConfig, Request, Scheduler,
+                           ServingEngine, longest_accept)
+from repro.serving.paged_cache import BlockTables
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# drafter: unit + fuzz vs a brute-force oracle
+# ---------------------------------------------------------------------------
+
+def test_drafter_basic_lookup():
+    d = NgramDrafter(k=3, max_ngram=2, min_ngram=1)
+    # trailing [4, 5] recurs at position 1; the continuation is [6, 7, 8]
+    hist = [9, 4, 5, 6, 7, 8, 4, 5]
+    assert list(d.propose(np.asarray(hist))) == [6, 7, 8]
+    # max_tokens caps the proposal below k
+    assert list(d.propose(np.asarray(hist), max_tokens=2)) == [6, 7]
+    assert list(d.propose(np.asarray(hist), max_tokens=0)) == []
+    # no recurrence anywhere → nothing proposed
+    assert list(d.propose(np.asarray([1, 2, 3, 4]))) == []
+
+
+def test_drafter_prefers_longer_then_most_recent():
+    d = NgramDrafter(k=2, max_ngram=3, min_ngram=1)
+    # trailing 3-gram [1, 2, 3] matches at position 0 even though the
+    # trailing 1-gram [3] also matches later — the longer match wins
+    hist = [1, 2, 3, 7, 3, 8, 1, 2, 3]
+    assert list(d.propose(np.asarray(hist))) == [7, 3]
+    # two occurrences of the trailing 1-gram: the most recent wins
+    d1 = NgramDrafter(k=1, max_ngram=1)
+    assert list(d1.propose(np.asarray([5, 1, 5, 2, 5]))) == [2]
+
+
+def test_drafter_validation():
+    with pytest.raises(ValueError):
+        NgramDrafter(k=0)
+    with pytest.raises(ValueError):
+        NgramDrafter(k=2, max_ngram=1, min_ngram=2)
+    with pytest.raises(ValueError):
+        NgramDrafter(k=2, min_ngram=0)
+
+
+def _oracle_propose(hist, k, max_ngram, min_ngram, limit):
+    """Brute-force re-statement of the drafter spec."""
+    n_hist = len(hist)
+    limit = min(k, limit)
+    if limit < 1 or n_hist < min_ngram + 1:
+        return []
+    for n in range(min(max_ngram, n_hist - 1), min_ngram - 1, -1):
+        tail = hist[n_hist - n:]
+        for i in range(n_hist - 1 - n, -1, -1):   # most recent first
+            if hist[i:i + n] == tail:
+                return hist[i + n:i + n + limit]
+    return []
+
+
+def test_drafter_fuzz_matches_oracle():
+    """Seeded fuzz: random small-vocab histories (repetition-rich) checked
+    against the brute-force oracle; proposals are deterministic, length- and
+    vocab-bounded by construction."""
+    rs = np.random.RandomState(11)
+    for _ in range(300):
+        k = int(rs.randint(1, 6))
+        max_n = int(rs.randint(1, 5))
+        min_n = int(rs.randint(1, max_n + 1))
+        d = NgramDrafter(k, max_ngram=max_n, min_ngram=min_n)
+        hist = rs.randint(0, 4, size=rs.randint(0, 24)).astype(np.int32)
+        limit = int(rs.randint(0, k + 2))
+        got = d.propose(hist, max_tokens=limit)
+        assert list(got) == _oracle_propose(
+            list(map(int, hist)), k, max_n, min_n, limit)
+        assert list(got) == list(d.propose(hist, max_tokens=limit))  # det.
+        assert len(got) <= min(k, limit)
+        assert all(t in set(map(int, hist)) for t in got)            # in-vocab
+
+
+# ---------------------------------------------------------------------------
+# acceptance rule: explicit cases + fuzz vs a sequential-decode oracle
+# ---------------------------------------------------------------------------
+
+def test_longest_accept_cases():
+    # full acceptance: every draft survives, plus the bonus token
+    assert longest_accept([1, 2], [1, 2, 9]) == (2, [1, 2, 9])
+    # first mismatch: accepted prefix + the model's own token there
+    assert longest_accept([1, 2], [1, 7, 9]) == (1, [1, 7])
+    assert longest_accept([1, 2], [5, 7, 9]) == (0, [5])
+    # k = 0 degenerates to exactly one plain decode step
+    assert longest_accept([], [3]) == (0, [3])
+    with pytest.raises(AssertionError):
+        longest_accept([1, 2], [1, 2])           # must score k+1 positions
+
+
+def test_longest_accept_fuzz_equals_sequential_decode():
+    """Oracle re-check: fix an arbitrary deterministic "model" next-token
+    function; however the draft was produced, the emitted tokens must equal
+    what stepwise greedy decode produces, and the un-emitted suffix is
+    exactly the rejected (rolled-back) region."""
+    rs = np.random.RandomState(5)
+    for _ in range(300):
+        k = int(rs.randint(0, 6))
+        ctx = list(map(int, rs.randint(0, 7, size=rs.randint(1, 5))))
+
+        def model_next(seq, _s=int(rs.randint(1 << 30))):
+            return (hash((_s,) + tuple(seq)) % 7)
+
+        draft = [int(t) for t in rs.randint(0, 7, size=k)]
+        if k and rs.rand() < 0.7:      # often feed partially-correct drafts
+            good = []
+            s = list(ctx)
+            for _ in range(k):
+                good.append(model_next(s))
+                s.append(good[-1])
+            cut = int(rs.randint(0, k + 1))
+            draft = good[:cut] + draft[cut:]
+        # the verify pass scores position j given ctx + draft[:j]
+        greedy = []
+        for j in range(k + 1):
+            greedy.append(model_next(ctx + draft[:j]))
+        accepted, emitted = longest_accept(draft, greedy)
+        # sequential oracle: decode len(emitted) tokens one at a time
+        s = list(ctx)
+        for tok in emitted:
+            assert model_next(s) == tok
+            s.append(tok)
+        assert 0 <= accepted <= k and len(emitted) == accepted + 1
+        # the token after the accepted prefix must NOT match (else the rule
+        # under-accepted)
+        if accepted < k:
+            assert draft[accepted] != greedy[accepted]
+
+
+# ---------------------------------------------------------------------------
+# multi-token growth: page boundaries, COW, rollback, near-dry preemption
+# ---------------------------------------------------------------------------
+
+def test_prepare_write_spans_page_boundaries():
+    cfg = PagedCacheConfig(page_size=4, num_pages=10, max_batch=2,
+                           max_pages_per_seq=5)
+    t = BlockTables(cfg)
+    assert t.admit(0, 6)                       # blocks 0, 1 owned
+    t.kv_len[0] = 6
+    g0 = t.pages_grown
+    assert t.prepare_write(0, 5)               # positions 6..10 → blocks 1, 2
+    assert t.pages_grown == g0 + 1             # only block 2 is new
+    assert t.append_dest_ok(0, 5)
+    dest = t.span_dest(0, 6, 11)
+    for i, p in enumerate(range(6, 11)):       # scatter math page-exact
+        assert dest[i] == t.tables[0, p // 4] * 4 + p % 4
+    # partial acceptance (logical rollback): only 2 of 5 writes advance;
+    # re-preparing the shifted span grows exactly the one new block and
+    # never re-allocates the already-owned ones
+    t.kv_len[0] = 8
+    g1 = t.pages_grown
+    assert t.prepare_write(0, 5)               # positions 8..12 → blocks 2, 3
+    assert t.pages_grown == g1 + 1
+    assert t.prepare_write(0, 5)               # idempotent
+    assert t.pages_grown == g1 + 1
+    # a span escaping the block table raises rather than corrupting
+    t.kv_len[0] = 18
+    with pytest.raises(ValueError):
+        t.prepare_write(0, 5)                  # position 20 → block 5 of 5
+
+
+def test_prepare_write_multi_block_cow():
+    """A verify span crossing from a prefix-shared block into an append
+    block must COW the shared page AND grow the append page in one call —
+    rejected draft writes may land in either, and neither may touch a page
+    another sequence still reads."""
+    cfg = PagedCacheConfig(page_size=4, num_pages=12, max_batch=2,
+                           max_pages_per_seq=4)
+    t = BlockTables(cfg, share_prefix=True)
+    prompt = np.arange(8, dtype=np.int32)
+    assert t.admit(0, 8, tokens=prompt)
+    t.kv_len[0] = 8
+    t.register_prefilled(0, 8)
+    assert t.admit(1, 8, tokens=prompt)        # aliases both prompt blocks
+    assert t.pages_shared == 2
+    shared_pg = int(t.tables[1, 1])
+    assert shared_pg == int(t.tables[0, 1])
+    assert t.allocator.refcount(shared_pg) == 2
+    # slot 1 re-runs its last prompt token then speculates: positions 7..11
+    # span shared block 1 and fresh blocks 2 (COW + grow in one call)
+    t.kv_len[1] = 7
+    assert t.prepare_write(1, 5)
+    assert t.cow_copies == 1
+    fresh = int(t.tables[1, 1])
+    assert fresh != shared_pg
+    assert t.allocator.refcount(shared_pg) == 1    # slot 0 keeps the page
+    assert t.drain_copies() == [(shared_pg, fresh)]
+    assert t.append_dest_ok(1, 5)
+    # the scatter slots for the spanned positions hit the fresh pages only
+    dest = t.span_dest(1, 7, 12)
+    assert dest[0] == fresh * 4 + 3
+    assert shared_pg not in set(int(x) // 4 for x in dest)
+
+
+def test_ensure_growth_near_dry_pool_preempts_mid_growth():
+    """A multi-page lookahead that runs the pool dry *between* the blocks of
+    one span: the first block is granted, the second finds the pool empty,
+    the youngest row is preempted, and the retried grant completes — with
+    the partially-granted page conserved throughout (never leaked, never
+    double-allocated)."""
+    cfg = PagedCacheConfig(page_size=4, num_pages=4, max_batch=2,
+                           max_pages_per_seq=3)     # 3 usable pages
+    sched = Scheduler(cfg, lazy=True)
+    alloc = sched.tables.allocator
+    for rid, gen in ((0, 8), (1, 8)):
+        sched.submit(Request(rid=rid, tokens=np.arange(4, dtype=np.int32),
+                             max_new_tokens=gen))
+    admitted = sched.admit()                        # 1 prompt page each
+    assert len(admitted) == 2 and alloc.num_free == 1
+    for seq in admitted:                            # emulate the prefill
+        seq.prefilled = 4
+        sched.tables.kv_len[seq.slot] = 4
+        sched.tables.register_prefilled(seq.slot, 4)
+        seq.generated.append(1)
+    old, young = sorted(admitted, key=lambda s: s.birth)
+    # lookahead 5 → positions 4..8 → blocks 1 and 2 for the oldest row:
+    # block 1 takes the last free page, block 2 preempts the youngest
+    preempted = sched.ensure_growth(5)
+    assert preempted == [young.request.rid]
+    assert sched.preemptions == 1
+    assert sorted(sched.tables._owned[old.slot]) == [0, 1, 2]
+    assert sched.tables.append_dest_ok(old.slot, 5)
+    # conservation: 3 pages on the oldest row, none free, none leaked
+    assert alloc.num_free == 0
+    assert alloc.num_allocated == 3
+    assert alloc.refs_total == 3
+    # the preempted row is queued at the front with its token re-folded
+    assert sched.waiting[0].rid == young.request.rid
+    assert sched.waiting[0].prompt_len == 5
+    # the oldest finishing returns everything — the resumed row can admit
+    old.generated.extend([1] * 7)
+    sched.evict_finished()
+    assert alloc.num_free == 3
+    assert len(sched.admit()) == 1
+
+
+def test_self_preemption_frees_partial_multi_block_grant():
+    """The youngest row dries the pool between the blocks of its own span:
+    it self-preempts, and the block it *did* get granted mid-span returns
+    to the pool with the rest (no leak)."""
+    cfg = PagedCacheConfig(page_size=2, num_pages=6, max_batch=2,
+                           max_pages_per_seq=4)     # 5 usable pages
+    sched = Scheduler(cfg, lazy=True)
+    alloc = sched.tables.allocator
+    for rid in (0, 1):
+        sched.submit(Request(rid=rid, tokens=np.arange(2, dtype=np.int32),
+                             max_new_tokens=6))     # budget 8 = 4 pages
+    admitted = sched.admit()                        # 1 prompt page each
+    assert len(admitted) == 2 and alloc.num_free == 3
+    for seq in admitted:
+        seq.prefilled = 2
+        sched.tables.kv_len[seq.slot] = 2
+        sched.tables.register_prefilled(seq.slot, 2)
+        seq.generated.append(1)
+    old, young = sorted(admitted, key=lambda s: s.birth)
+    # lookahead 3 → positions 2..4 → blocks 1, 2 (two pages per row).  The
+    # oldest takes two of the three free pages; the youngest grants block 1
+    # with the last one, dries at block 2 and self-preempts — the partial
+    # grant must free along with its prompt page
+    preempted = sched.ensure_growth(3)
+    assert preempted == [young.request.rid]
+    assert sched.preemptions == 1
+    assert list(sched.active) == [old.slot]
+    assert sched.tables.append_dest_ok(old.slot, 3)
+    assert alloc.num_free == 2                      # young's 2 pages back
+    assert alloc.num_allocated == 3                 # old: blocks 0, 1, 2
+    assert alloc.refs_total == 3
+    assert sched.waiting[0].rid == young.request.rid
+    assert sched.waiting[0].prompt_len == 3         # generated folded in
+
+
+# ---------------------------------------------------------------------------
+# the composition matrix: spec ≡ plain greedy across every serving feature
+# ---------------------------------------------------------------------------
+
+def _smoke_cfg():
+    from repro import configs
+    return dataclasses.replace(configs.smoke_config("qwen3_14b"),
+                               dtype=jnp.float32, remat=False)
+
+
+def _params(cfg):
+    from repro.models import lm
+    params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return params
+
+
+def _motif_reqs(rs, vocab, specs):
+    """Ragged requests whose prompts tile a short motif, so the n-gram
+    drafter has recurrences to match (uniform-random prompts rarely draft)."""
+    reqs = []
+    for plen, gen in specs:
+        motif = rs.randint(0, vocab, size=4)
+        reqs.append((np.tile(motif, -(-plen // 4))[:plen].astype(np.int32),
+                     gen))
+    return reqs
+
+
+def _run_pair(cfg, pcfg, params, reqs, k=4, **kw):
+    """Run the same workload plain and speculative; return both."""
+    outs, stats = [], []
+    for spec in (None, k):
+        eng = ServingEngine(cfg, pcfg, params, impl="xla", xla_chunk=16,
+                            speculate_k=spec, **kw)
+        o, s = eng.run(list(reqs))
+        assert eng.scheduler.tables.allocator.num_free \
+            + eng.scheduler.tables.allocator.num_cached == pcfg.usable_pages
+        outs.append(o)
+        stats.append(s)
+    assert set(outs[0]) == set(outs[1])
+    for rid in outs[0]:
+        assert np.array_equal(outs[0][rid], outs[1][rid]), \
+            f"request {rid}: spec {outs[1][rid]} != plain {outs[0][rid]}"
+    return outs[0], stats[0], stats[1]
+
+
+BASE_SPECS = [(9, 6), (5, 8), (8, 4)]
+
+
+def test_spec_matrix_eager_matches_plain_and_contiguous():
+    """Eager cell, plus the contiguous anchor: the speculative paged engine
+    reproduces the contiguous-cache single-request reference token for
+    token (transitively pinning every later cell to the same reference)."""
+    from repro.runtime.steps import make_serve_steps
+
+    cfg = _smoke_cfg()
+    params = _params(cfg)
+    reqs = _motif_reqs(np.random.RandomState(0), cfg.vocab_size, BASE_SPECS)
+
+    def contiguous_gen(prompt, max_new, max_len=16):
+        arts = make_serve_steps(cfg, impl="xla", max_len=max_len, batch=1,
+                                xla_chunk=16)
+        caches = arts.cache_init_fn()
+        logits, caches = arts.prefill_fn(params, jnp.asarray(prompt)[None],
+                                         None, caches)
+        tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)
+        out = [int(tok[0])]
+        for i in range(max_new - 1):
+            logits, caches = arts.decode_fn(params, tok, caches,
+                                            jnp.int32(len(prompt) + i))
+            tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)
+            out.append(int(tok[0]))
+        return np.asarray(out, np.int32)
+
+    pcfg = PagedCacheConfig(page_size=4, num_pages=14, max_batch=2,
+                            max_pages_per_seq=4)
+    out, st_plain, st_spec = _run_pair(cfg, pcfg, params, reqs,
+                                       prefill_len=16)
+    for rid, (prompt, gen) in enumerate(reqs):
+        exp = contiguous_gen(prompt, gen)
+        assert np.array_equal(out[rid], exp), \
+            f"request {rid}: paged {out[rid]} != contiguous {exp}"
+    assert st_spec["drafted_tokens"] > 0         # the drafter actually fired
+    assert st_spec["decode_steps"] <= st_plain["decode_steps"]
+    # budgets hold exactly under multi-token emission
+    for rid, (_, gen) in enumerate(reqs):
+        assert len(out[rid]) == gen
+
+
+def test_spec_matrix_lazy_forced_preemption():
+    """Lazy cell: a pool tight enough that the spec run's multi-page
+    lookahead growth preempts — preempt/re-prefill must compose with
+    drafting (the resumed history re-folds generated into the prompt)."""
+    cfg = _smoke_cfg()
+    params = _params(cfg)
+    reqs = _motif_reqs(np.random.RandomState(1), cfg.vocab_size, BASE_SPECS)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=7, max_batch=2,
+                            max_pages_per_seq=4)
+    _, st_plain, st_spec = _run_pair(cfg, pcfg, params, reqs,
+                                     prefill_len=16, lazy=True)
+    assert st_spec["preemptions"] >= 1           # the pressure actually bit
+    assert st_spec["pages_grown"] >= 1
+
+
+def test_spec_matrix_prefix_sharing_cow():
+    """Prefix-sharing cell: an identical late prompt aliases a live row's
+    registered pages, so the verify write must COW before scattering —
+    rejected drafts never corrupt the sibling's KV."""
+    cfg = _smoke_cfg()
+    params = _params(cfg)
+    rs = np.random.RandomState(2)
+    motif = rs.randint(0, cfg.vocab_size, size=4)
+    shared = np.tile(motif, 2).astype(np.int32)            # 8 = 2 full blocks
+    other = rs.randint(0, cfg.vocab_size, size=5).astype(np.int32)
+    # the twin prompt admits while the first is still decoding (the short
+    # middle request frees its slot early) → live aliasing, then COW
+    reqs = [(shared, 8), (other, 2), (shared.copy(), 4)]
+    pcfg = PagedCacheConfig(page_size=4, num_pages=14, max_batch=2,
+                            max_pages_per_seq=4)
+    _, st_plain, st_spec = _run_pair(cfg, pcfg, params, reqs,
+                                     prefill_len=16, share_prefix=True)
+    assert st_spec["pages_shared"] > 0
+    assert st_spec["cow_copies"] >= 1
+
+
+def test_spec_matrix_chunked_prefill():
+    """Chunked-prefill cell: drafts interleave with mid-prompt rows riding
+    the verify step masked (trash tables / kv_len 0)."""
+    cfg = _smoke_cfg()
+    params = _params(cfg)
+    reqs = _motif_reqs(np.random.RandomState(3), cfg.vocab_size, BASE_SPECS)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=14, max_batch=2,
+                            max_pages_per_seq=4)
+    _, _, st_spec = _run_pair(cfg, pcfg, params, reqs,
+                              prefill_len=16, prefill_chunk=5)
+    assert st_spec["prefill_tokens"] == sum(len(p) for p, _ in reqs)
+
+
+def test_spec_matrix_sliding_window_reclamation():
+    """Sliding-window cell: multi-token advances cross reclamation horizons;
+    the freed-page gate must hold for every drafted position."""
+    cfg = dataclasses.replace(_smoke_cfg(), attn_window=10)
+    params = _params(cfg)
+    reqs = _motif_reqs(np.random.RandomState(4), cfg.vocab_size,
+                       [(8, 12), (11, 9)])
+    pcfg = PagedCacheConfig(page_size=4, num_pages=10, max_batch=2,
+                            max_pages_per_seq=6)
+    _, _, st_spec = _run_pair(cfg, pcfg, params, reqs,
+                              prefill_len=24, lazy=True)
+    assert st_spec["pages_reclaimed"] > 0
+
+
+def test_spec_matrix_split_kv_decode():
+    """num_splits > 1 cell: the verify step inherits the decode path's
+    split-KV launch geometry; partial-merge must stay exact across the
+    k+1-wide token axis."""
+    cfg = _smoke_cfg()
+    params = _params(cfg)
+    reqs = _motif_reqs(np.random.RandomState(6), cfg.vocab_size, BASE_SPECS)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=14, max_batch=2,
+                            max_pages_per_seq=4)
+    _run_pair(cfg, pcfg, params, reqs, prefill_len=16, num_splits=2)
+
+
+# ---------------------------------------------------------------------------
+# oracle drafter: force multi-token acceptance end to end
+# ---------------------------------------------------------------------------
+
+class _OracleDrafter:
+    """Perfect-foresight drafter: proposes the continuation of whichever
+    reference stream (prompt + the plain run's generation) the row's history
+    is a prefix of.  Drives acceptance to 1.0, so multi-token kv_len
+    advances — page-boundary crossings included — provably execute."""
+
+    def __init__(self, k, streams):
+        self.k = k
+        self.streams = [np.asarray(s, np.int32) for s in streams]
+
+    def propose(self, history, max_tokens=-1):
+        limit = self.k if max_tokens < 0 else min(self.k, max_tokens)
+        h = np.asarray(history, np.int32)
+        n = int(h.shape[0])
+        if limit < 1:
+            return np.zeros(0, np.int32)
+        for s in self.streams:
+            if s.shape[0] >= n and np.array_equal(s[:n], h):
+                return s[n:n + limit].copy()
+        return np.zeros(0, np.int32)
+
+
+def test_oracle_drafter_full_acceptance_advances_multi_token():
+    cfg = _smoke_cfg()
+    params = _params(cfg)
+    rs = np.random.RandomState(0)
+    reqs = [(rs.randint(0, cfg.vocab_size, size=L).astype(np.int32), g)
+            for L, g in BASE_SPECS]
+    pcfg = PagedCacheConfig(page_size=4, num_pages=14, max_batch=2,
+                            max_pages_per_seq=4)
+
+    eng_p = ServingEngine(cfg, pcfg, params, impl="xla", prefill_len=16,
+                          xla_chunk=16)
+    out_p, st_p = eng_p.run(list(reqs))
+    streams = [np.concatenate([reqs[rid][0], out_p[rid]])
+               for rid in sorted(out_p)]
+
+    eng_s = ServingEngine(cfg, pcfg, params, impl="xla", prefill_len=16,
+                          xla_chunk=16, speculate_k=4)
+    eng_s.drafter = _OracleDrafter(4, streams)
+    out_s, st_s = eng_s.run(list(reqs))
+    for rid in out_p:
+        assert np.array_equal(out_s[rid], out_p[rid])
+    assert st_s["acceptance_rate"] == 1.0
+    assert st_s["accepted_tokens"] > 0
+    # 5-token advances over page_size=4 pages force boundary crossings, and
+    # the verify-step count collapses accordingly
+    assert st_s["decode_steps"] * 2 < st_p["decode_steps"]
+
+
+def test_oracle_drafter_under_lazy_preemption():
+    """Full-width accepted spans under a dry pool: multi-page growth,
+    preemption mid-workload, and re-prefilled rows whose oracle stream still
+    matches after the generated tokens fold into the prompt."""
+    cfg = _smoke_cfg()
+    params = _params(cfg)
+    rs = np.random.RandomState(1)
+    reqs = [(rs.randint(0, cfg.vocab_size, size=L).astype(np.int32), g)
+            for L, g in BASE_SPECS]
+    pcfg = PagedCacheConfig(page_size=4, num_pages=7, max_batch=2,
+                            max_pages_per_seq=4)
+
+    eng_p = ServingEngine(cfg, pcfg, params, impl="xla", prefill_len=16,
+                          xla_chunk=16, lazy=True)
+    out_p, st_p = eng_p.run(list(reqs))
+    streams = [np.concatenate([reqs[rid][0], out_p[rid]])
+               for rid in sorted(out_p)]
+
+    eng_s = ServingEngine(cfg, pcfg, params, impl="xla", prefill_len=16,
+                          xla_chunk=16, lazy=True, speculate_k=4)
+    eng_s.drafter = _OracleDrafter(4, streams)
+    out_s, st_s = eng_s.run(list(reqs))
+    for rid in out_p:
+        assert np.array_equal(out_s[rid], out_p[rid])
+    assert st_s["preemptions"] >= 1
+    assert st_s["accepted_tokens"] > 0
+
+
+def test_spec_eos_mid_accepted_draft():
+    """EOS landing inside an accepted span: the emission truncates at the
+    EOS inclusive — tokens past it (already scattered into pages) are
+    discarded with the evicted row, identical to plain EOS eviction."""
+    cfg = _smoke_cfg()
+    params = _params(cfg)
+    rs = np.random.RandomState(2)
+    prompt = rs.randint(0, cfg.vocab_size, size=8).astype(np.int32)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=14, max_batch=2,
+                            max_pages_per_seq=4)
+
+    eng = ServingEngine(cfg, pcfg, params, impl="xla", prefill_len=16,
+                        xla_chunk=16)
+    ref, _ = eng.run([(prompt, 8)])
+    ref = ref[0]
+    eos = int(ref[4])                        # truncate mid-generation
+    cut = list(ref).index(eos) + 1
+
+    def run(spec):
+        eng = ServingEngine(cfg, pcfg, params, impl="xla", prefill_len=16,
+                            xla_chunk=16, eos_id=eos, speculate_k=spec)
+        if spec:
+            eng.drafter = _OracleDrafter(
+                spec, [np.concatenate([prompt, ref])])
+        out, st = eng.run([(prompt, 8)])
+        return out[0], st
+
+    out_plain, _ = run(None)
+    out_spec, st_spec = run(4)
+    assert list(out_plain) == list(ref[:cut])
+    assert list(out_spec) == list(out_plain)
+    assert st_spec["decode_steps"] < len(out_plain)   # multi-token emission
+
+
+def test_speculate_validation():
+    cfg = _smoke_cfg()
+    params = _params(cfg)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=8, max_batch=2,
+                            max_pages_per_seq=4)
+    with pytest.raises(ValueError):
+        ServingEngine(cfg, pcfg, params, speculate_k=-1)
+    # 0 and None mean off: no drafter, single-token lookahead
+    eng = ServingEngine(cfg, pcfg, params, speculate_k=0)
+    assert eng.drafter is None and eng._lookahead == 1
+
+
+# ---------------------------------------------------------------------------
+# distributed: sharded speculative engine ≡ single-device plain engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_sharded_spec_engine_matches_single_device():
+    """The matrix's sharded cell: speculative decoding on a 2-way ("model",)
+    mesh — verify runs the per-shard partial-merge decode path k+1 tokens
+    wide — reproduces the single-device PLAIN engine token for token.
+    Subprocess: the fake-device XLA flag must be set before jax initialises."""
+    code = """
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro import configs
+from repro.launch.mesh import make_mesh
+from repro.models import lm
+from repro.serving import PagedCacheConfig, ServingEngine
+
+cfg = dataclasses.replace(configs.smoke_config("qwen3_14b"),
+                          dtype=jnp.float32, remat=False)
+params, _ = lm.init_params(cfg, jax.random.PRNGKey(0), vocab_pad_to=2)
+rs = np.random.RandomState(0)
+reqs = []
+for plen, gen in [(9, 6), (5, 8), (8, 4)]:
+    motif = rs.randint(0, cfg.vocab_size, size=4)
+    reqs.append((np.tile(motif, -(-plen // 4))[:plen].astype(np.int32), gen))
+
+pcfg = PagedCacheConfig(page_size=4, num_pages=14, max_batch=2,
+                        max_pages_per_seq=4)
+eng1 = ServingEngine(cfg, pcfg, params, impl="xla", prefill_len=16,
+                     xla_chunk=16)
+out1, _ = eng1.run(list(reqs))
+
+mesh = make_mesh((2,), ("model",))
+pcfg2 = dataclasses.replace(pcfg, num_shards=2)
+eng2 = ServingEngine(cfg, pcfg2, params, impl="xla", prefill_len=16,
+                     xla_chunk=16, mesh=mesh, speculate_k=4)
+out2, stats2 = eng2.run(list(reqs))
+
+assert set(out1) == set(out2)
+for rid in out1:
+    assert np.array_equal(out1[rid], out2[rid]), \\
+        f"request {rid}: sharded-spec {out2[rid]} != plain {out1[rid]}"
+assert stats2["drafted_tokens"] > 0
+assert eng2.scheduler.tables.allocator.num_free == pcfg2.usable_pages
+print("PASS")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         env=env, capture_output=True, text=True, timeout=480)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
+    assert "PASS" in out.stdout
