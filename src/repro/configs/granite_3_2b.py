@@ -8,6 +8,7 @@ CONFIG = ArchConfig(
     name="granite-3-2b", family="dense",
     num_layers=40, d_model=2048, num_heads=32, num_kv_heads=8,
     d_ff=8192, vocab_size=49155,
+    # sparklint: disable=fsdp-profile-gate -- intentional annotation-only: TP-SP behavior without fsdp=True is pinned by test_sharding_rules
     sharding_profile="fsdp",  # scale annotation: perf iteration 6 measured
                               # collective 3.09s->0.61s, MFU 10.6%->54.2%
                               # under the launcher's ZeRO-3 hillclimb override;

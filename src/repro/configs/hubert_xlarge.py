@@ -9,6 +9,7 @@ CONFIG = ArchConfig(
     num_layers=48, d_model=1280, num_heads=16, num_kv_heads=16,
     d_ff=5120, vocab_size=504,
     causal=False,                 # encoder-only: no decode shapes
+    # sparklint: disable=fsdp-profile-gate -- intentional annotation-only: TP-SP behavior without fsdp=True is pinned by test_sharding_rules
     sharding_profile="fsdp",      # scale annotation (perf iteration 6:
                                   # 5.4x train step under the ZeRO-3 override);
                                   # engine keeps TP-SP without fsdp=True

@@ -189,6 +189,7 @@ def _xla_masked_decode_partials(q, k, v, *, kv_len=None, window=None,
     s = jnp.where(allowed, s, NEG_INF)
     m = jnp.max(s, axis=-1)
     m_safe = jnp.where(m == NEG_INF, 0.0, m)   # exp(NEG_INF - NEG_INF) == 1
+    # sparklint: disable=no-inline-softmax-fold -- single-block partial state built in one shot with an explicit where(allowed); guard is m_safe above
     p = jnp.where(allowed, jnp.exp(s - m_safe[..., None]), 0.0)
     l = jnp.sum(p, axis=-1)
     acc = jnp.einsum("bhk,bhkd->bhd", p, vf.astype(jnp.float32))

@@ -66,6 +66,7 @@ def _recompute_p(q, k, lse, *, scale, causal, window, q_start, kv_start,
     # fully-masked rows store lse == NEG_INF; exp(s - lse) would be exp(0) = 1
     # there — substitute 0 so the recomputed probs are 0 (zero gradients).
     lse_safe = jnp.where(lse == NEG_INF, 0.0, lse)
+    # sparklint: disable=no-inline-softmax-fold -- not a fold: backward recompute of P from the stored LSE (guard is lse_safe above)
     p = jnp.exp(s - lse_safe[:, None])     # normalised probs, rows with lse
     keep = None
     if dropout_rate > 0.0:

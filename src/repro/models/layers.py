@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.core.attention import (spark_attention, spark_decode,
                                   spark_paged_decode)
+from repro.core.online_softmax import NEG_INF
 
 
 # ---------------------------------------------------------------------------
@@ -99,7 +100,7 @@ def softmax_cross_entropy(logits, labels, vocab_size: int, weights=None):
     positions with weight > 0 (packed batches mask segment boundaries)."""
     logits = logits.astype(jnp.float32)
     if logits.shape[-1] > vocab_size:  # mask vocab padding
-        neg = jnp.full((logits.shape[-1] - vocab_size,), -1e30, jnp.float32)
+        neg = jnp.full((logits.shape[-1] - vocab_size,), NEG_INF, jnp.float32)
         logits = logits.at[..., vocab_size:].set(neg)
     lse = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]

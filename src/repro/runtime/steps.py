@@ -278,15 +278,18 @@ def make_serve_steps(cfg, *, mesh=None, impl: str = "xla", max_len: int = 2048,
     if mesh is not None:
         params_shape, specs = lm.abstract_params(cfg, vocab_pad_to=vocab_pad)
         p_shard = rules.tree_shardings(params_shape, specs)
+        # the KV cache is donated by BOTH steps: prefill writes the prompt
+        # K/V into it and decode updates it in place (halves the serving
+        # memory footprint — caches are the dominant serving tensor); every
+        # caller threads the returned caches into the next call
         prefill_jit = jax.jit(prefill_fn,
-                              in_shardings=(p_shard, None, None, None))
-        # the KV cache is donated: decode updates it in place (halves the
-        # serving memory footprint — caches are the dominant decode tensor)
+                              in_shardings=(p_shard, None, None, None),
+                              donate_argnums=(3,))
         decode_jit = jax.jit(decode_fn, donate_argnums=(2,))
         return ServeArtifacts(prefill_fn=prefill_jit, decode_fn=decode_jit,
                               cache_init_fn=cache_init, rules=rules,
                               rules_decode=rules_dec)
-    return ServeArtifacts(prefill_fn=jax.jit(prefill_fn),
+    return ServeArtifacts(prefill_fn=jax.jit(prefill_fn, donate_argnums=(3,)),
                           decode_fn=jax.jit(decode_fn, donate_argnums=(2,)),
                           cache_init_fn=cache_init, rules=rules,
                           rules_decode=rules_dec)

@@ -1,0 +1,1 @@
+"""Repo tooling: docs drift guard (check_docs) + sparklint (analysis/)."""

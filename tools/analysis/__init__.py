@@ -1,0 +1,15 @@
+"""sparklint — AST-based contract checker for this repo's hard-won invariants.
+
+Run with ``python -m tools.analysis`` (CI's required ``lint`` job). Every
+rule encodes a contract a past bug taught us (docs/analysis.md maps each
+rule to its motivating incident); violations exit non-zero. Intentional
+exceptions carry ``# sparklint: disable=<rule> -- <justification>`` inline.
+
+Programmatic use::
+
+    from tools.analysis import run
+    findings = run("/path/to/repo")        # list[Finding], suppressions applied
+"""
+
+from tools.analysis.core import (AstCache, Finding, JUSTIFICATION_RULE,  # noqa: F401
+                                 RULES, rule, run)

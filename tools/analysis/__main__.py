@@ -1,0 +1,59 @@
+"""sparklint CLI: ``python -m tools.analysis [--json] [--rule ID ...] [ROOT]``.
+
+Text mode prints one ``path:line: [rule] message`` per finding plus a
+summary; ``--json`` emits ``{"findings": [...], "count": N}`` on stdout for
+tooling. Exit status: 0 clean, 1 findings, 2 usage error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from tools.analysis.core import DEFAULT_DIRS, RULES, run
+
+
+def main(argv=None) -> int:
+    """Parse args, run the registered rules, print findings, return status."""
+    from tools.analysis import rules as _rules  # noqa: F401  (registers)
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analysis",
+        description="sparklint: repo-contract static checks")
+    ap.add_argument("root", nargs="?", default=None,
+                    help="repo root to scan (default: this repo)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable output")
+    ap.add_argument("--rule", action="append", dest="rules", metavar="ID",
+                    help="run only this rule id (repeatable)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered rules and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for rid, rl in sorted(RULES.items()):
+            print(f"{rid}: {rl.description}")
+        return 0
+
+    root = Path(args.root) if args.root else \
+        Path(__file__).resolve().parent.parent.parent
+    unknown = [r for r in (args.rules or ()) if r not in RULES]
+    if unknown:
+        print(f"unknown rule id(s): {', '.join(unknown)}", file=sys.stderr)
+        return 2
+
+    findings = run(root, dirs=DEFAULT_DIRS, rules=args.rules)
+    if args.as_json:
+        print(json.dumps({"findings": [f.to_json() for f in findings],
+                          "count": len(findings)}, indent=2))
+    else:
+        for f in findings:
+            print(f.text())
+        print(f"sparklint: {'FAIL' if findings else 'ok'} "
+              f"({len(findings)} finding(s), {len(RULES)} rule(s))")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

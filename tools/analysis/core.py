@@ -1,0 +1,245 @@
+"""sparklint core: shared AST cache, findings, suppressions, rule registry.
+
+The checker exists because every expensive bug this repo has shipped was a
+*contract* violation invisible to pytest until the right composition hit it
+(a kernel fold missing the fully-masked-row guard, the FSDP gate firing on
+annotation alone, double-frees aliasing two sequences' KV). Each rule in
+``tools/analysis/rules/`` machine-checks one such invariant; this module is
+the substrate they share:
+
+* :class:`AstCache` — parse each file once per run, shared by every rule
+  (and by ``tools/check_docs.py``, which runs its AST checks on the same
+  cache — one analysis substrate for the repo);
+* :class:`Finding` — one violation: file, line, rule id, message;
+* suppressions — ``# sparklint: disable=<rule>[,<rule>] -- <justification>``
+  on the offending line (or alone on the line above it). The justification
+  after ``--`` is mandatory: an unjustified disable is itself reported under
+  the ``suppression-justification`` rule, so exceptions stay documented;
+* :func:`rule` / :func:`run` — registry and driver. A rule declares the
+  repo-relative globs it applies to, so the same rule runs unchanged on the
+  real tree and on the fixture trees in ``tests/test_sparklint.py``.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import re
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional, Set
+
+SUPPRESS_RE = re.compile(
+    r"#\s*sparklint:\s*disable=([A-Za-z0-9_,\- ]+?)\s*(?:--\s*(\S.*))?$")
+
+#: rule id under which unjustified suppressions are reported
+JUSTIFICATION_RULE = "suppression-justification"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One contract violation: where (file:line), what (rule id), why (message)."""
+    rule: str
+    path: str      # repo-relative posix path
+    line: int
+    message: str
+
+    def text(self) -> str:
+        """The one-line ``path:line: [rule] message`` form used by the CLI."""
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    def to_json(self) -> Dict:
+        """JSON-object form (stable schema: rule/path/line/message)."""
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message}
+
+
+class SourceFile:
+    """One parsed source file: text, lines, AST, and its suppression table.
+
+    ``suppressions`` maps line number → set of rule ids disabled on that
+    line; a disable comment on a line of its own covers the next line (the
+    statement it annotates). ``unjustified`` lists the lines whose disable
+    comment is missing the mandatory ``-- <why>`` tail.
+    """
+
+    def __init__(self, path: Path, rel: str):
+        self.path = path
+        self.rel = rel
+        self.text = path.read_text()
+        self.lines = self.text.splitlines()
+        self.parse_error: Optional[SyntaxError] = None
+        try:
+            self.tree: Optional[ast.Module] = ast.parse(self.text)
+        except SyntaxError as e:
+            self.tree = None
+            self.parse_error = e
+        self.suppressions: Dict[int, Set[str]] = {}
+        self.unjustified: List[int] = []
+        self._scan_suppressions()
+
+    def _scan_suppressions(self) -> None:
+        for lineno, line in enumerate(self.lines, 1):
+            m = SUPPRESS_RE.search(line)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            if not m.group(2):
+                self.unjustified.append(lineno)
+            target = lineno
+            if line.split("#", 1)[0].strip() == "":
+                target = lineno + 1     # comment-only line covers the next
+            self.suppressions.setdefault(target, set()).update(rules)
+
+    def suppressed(self, rule_id: str, line: int) -> bool:
+        """True if ``rule_id`` is disabled on ``line`` (or globally-per-line)."""
+        active = self.suppressions.get(line, ())
+        return rule_id in active or "all" in active
+
+
+class AstCache:
+    """Parse-once cache over a source tree root; rules and check_docs share it."""
+
+    def __init__(self, root: Path):
+        self.root = Path(root).resolve()
+        self._files: Dict[str, SourceFile] = {}
+
+    def get(self, path) -> SourceFile:
+        """The cached :class:`SourceFile` for ``path`` (absolute or relative)."""
+        p = Path(path)
+        if not p.is_absolute():
+            p = self.root / p
+        rel = p.resolve().relative_to(self.root).as_posix()
+        if rel not in self._files:
+            self._files[rel] = SourceFile(p, rel)
+        return self._files[rel]
+
+    def iter_python(self, *dirs: str) -> Iterable[SourceFile]:
+        """Every ``*.py`` under the given root-relative dirs, sorted, cached."""
+        for d in dirs:
+            base = self.root / d
+            if not base.is_dir():
+                continue
+            for py in sorted(base.rglob("*.py")):
+                if "__pycache__" in py.parts:
+                    continue
+                yield self.get(py)
+
+    def matching(self, patterns: Iterable[str],
+                 search_dirs: Iterable[str]) -> Iterable[SourceFile]:
+        """Files under ``search_dirs`` whose relpath matches any glob."""
+        for sf in self.iter_python(*search_dirs):
+            if any(fnmatch.fnmatch(sf.rel, pat) for pat in patterns):
+                yield sf
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """A registered rule: id, one-line contract, target globs, check function."""
+    id: str
+    description: str
+    paths: tuple
+    check: Callable          # (AstCache, SourceFile) -> List[Finding]
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def rule(rule_id: str, *, description: str, paths: Iterable[str]):
+    """Register a per-file rule. ``check(cache, sf)`` returns raw findings;
+    the driver applies suppressions and ordering."""
+    def deco(fn):
+        RULES[rule_id] = Rule(rule_id, description, tuple(paths), fn)
+        return fn
+    return deco
+
+
+# directories a default run scans (rule globs narrow further); tests/ is
+# read by the oracle-coverage rule through the cache but not scanned itself
+DEFAULT_DIRS = ("src", "tools")
+
+
+def run(root, *, dirs: Iterable[str] = DEFAULT_DIRS,
+        rules: Optional[Iterable[str]] = None) -> List[Finding]:
+    """Run every (selected) rule over ``root``; returns ordered findings.
+
+    Suppressions are applied here: a finding whose line carries a matching
+    ``disable`` is dropped, and every disable missing its justification is
+    reported once under ``suppression-justification``.
+    """
+    from tools.analysis import rules as _rules  # noqa: F401  (registers)
+    cache = AstCache(Path(root))
+    selected = [RULES[r] for r in rules] if rules else list(RULES.values())
+    findings: List[Finding] = []
+    seen_files: Dict[str, SourceFile] = {}
+    for rl in selected:
+        for sf in cache.matching(rl.paths, dirs):
+            seen_files[sf.rel] = sf
+            if sf.parse_error is not None:
+                findings.append(Finding(
+                    rl.id, sf.rel, sf.parse_error.lineno or 1,
+                    f"unparsable file: {sf.parse_error.msg}"))
+                continue
+            for f in rl.check(cache, sf):
+                if not sf.suppressed(f.rule, f.line):
+                    findings.append(f)
+    for sf in seen_files.values():
+        for lineno in sf.unjustified:
+            findings.append(Finding(
+                JUSTIFICATION_RULE, sf.rel, lineno,
+                "sparklint disable without a '-- <justification>' tail"))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+# ---- small AST helpers shared by the rule modules ----
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """'jnp.float32' for Attribute/Name chains, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    """Dotted name of a call's callee ('pl.pallas_call'), else None."""
+    return dotted(call.func)
+
+
+def const_tuple(node: ast.AST) -> Optional[tuple]:
+    """Statically evaluate a tuple/int literal (donate_argnums), else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, ast.Tuple):
+        vals = []
+        for elt in node.elts:
+            if not (isinstance(elt, ast.Constant)
+                    and isinstance(elt.value, int)):
+                return None
+            vals.append(elt.value)
+        return tuple(vals)
+    return None
+
+
+def enclosing_functions(tree: ast.Module) -> Dict[ast.AST, Optional[ast.AST]]:
+    """Map each node to its innermost enclosing FunctionDef (None = module).
+
+    A FunctionDef maps to the function *containing* it, so nested helpers
+    attribute to their parent and a def's own body attributes to the def.
+    """
+    owner: Dict[ast.AST, Optional[ast.AST]] = {tree: None}
+
+    def visit(node, fn):
+        for child in ast.iter_child_nodes(node):
+            owner[child] = fn
+            child_fn = child if isinstance(
+                child, (ast.FunctionDef, ast.AsyncFunctionDef)) else fn
+            visit(child, child_fn)
+
+    visit(tree, None)
+    return owner

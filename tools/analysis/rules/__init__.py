@@ -1,0 +1,14 @@
+"""sparklint rule modules — importing this package registers every rule.
+
+Each module guards one layer's invariants (see each module's docstring for
+the motivating bug, and docs/analysis.md for the full catalogue):
+
+* :mod:`.kernels`  — fold routing, launch helper, f32 state, NEG_INF source
+* :mod:`.serving`  — host layer stays numpy/python
+* :mod:`.runtime`  — page-pool donation + donated-binding def-use
+* :mod:`.configs`  — fsdp profile/flag gate
+* :mod:`.coverage` — ops.py entrypoints are test-referenced
+"""
+
+from tools.analysis.rules import (configs, coverage, kernels,  # noqa: F401
+                                  runtime, serving)

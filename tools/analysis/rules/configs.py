@@ -1,0 +1,48 @@
+"""Config-zoo contract: the FSDP profile annotation never acts alone.
+
+The PR 3 seed bug: ``default_rules`` took the full ZeRO-3 profile from
+``sharding_profile="fsdp"`` *alone*, FSDP-sharding embed/vocab on configs
+(granite, hubert) that annotate the profile as a scale note but expect
+TP-SP. The gate now requires ``fsdp=True`` too — so a config that sets the
+profile without the flag is either relying on the old buggy behaviour or
+annotating intentionally, and must say which (fix it, or suppress with the
+justification).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.analysis.core import Finding, rule
+
+
+def _kw(call: ast.Call, name: str):
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+@rule("fsdp-profile-gate",
+      description="sharding_profile='fsdp' without fsdp=True is flagged "
+                  "(the PR 3 annotation-alone bug class)",
+      paths=("src/repro/configs/*.py",))
+def fsdp_profile_gate(cache, sf) -> List[Finding]:
+    """Flag any call setting the fsdp profile without the opt-in flag."""
+    out = []
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        prof = _kw(node, "sharding_profile")
+        if not (isinstance(prof, ast.Constant) and prof.value == "fsdp"):
+            continue
+        flag = _kw(node, "fsdp")
+        if isinstance(flag, ast.Constant) and flag.value is True:
+            continue
+        out.append(Finding(
+            "fsdp-profile-gate", sf.rel, prof.lineno,
+            "sharding_profile='fsdp' without fsdp=True — the rule engine "
+            "keeps TP-SP (profile gate requires both flags); set fsdp=True "
+            "or suppress with the intent"))
+    return out

@@ -1,0 +1,56 @@
+"""Oracle-coverage contract: every public op entrypoint is exercised by tests.
+
+``kernels/ops.py`` is the public surface the oracle tests pin — an
+entrypoint no test references is an entrypoint whose kernel/fallback/oracle
+agreement can silently rot (exactly how the seed's decode variants diverged
+before the PR 5 unification). The rule cross-references every public
+top-level def/class in ops.py against the identifier sets of ``tests/``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from tools.analysis.core import Finding, rule
+
+OPS_PATH = "src/repro/kernels/ops.py"
+
+
+def _test_identifiers(cache) -> Set[str]:
+    """Every Name id and Attribute attr appearing in any tests/*.py file."""
+    idents: Set[str] = set()
+    for sf in cache.iter_python("tests"):
+        if sf.tree is None:
+            continue
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Name):
+                idents.add(node.id)
+            elif isinstance(node, ast.Attribute):
+                idents.add(node.attr)
+            elif isinstance(node, ast.ImportFrom):
+                idents.update(a.name for a in node.names)
+    return idents
+
+
+@rule("ops-test-coverage",
+      description="every public entrypoint in kernels/ops.py is referenced "
+                  "by at least one test file",
+      paths=(OPS_PATH,))
+def ops_test_coverage(cache, sf) -> List[Finding]:
+    """Flag public top-level defs/classes in ops.py absent from tests/."""
+    idents = _test_identifiers(cache)
+    out = []
+    for node in sf.tree.body:
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+            continue
+        if node.name.startswith("_"):
+            continue
+        if node.name not in idents:
+            kind = "class" if isinstance(node, ast.ClassDef) else "function"
+            out.append(Finding(
+                "ops-test-coverage", sf.rel, node.lineno,
+                f"public {kind} '{node.name}' is not referenced by any "
+                f"test file — add an oracle test or make it private"))
+    return out

@@ -1,0 +1,139 @@
+"""Runtime-step contract: page pools are donated, and donation is respected.
+
+The KV cache / page pool is the dominant serving tensor; a jitted step that
+takes it without donating doubles peak memory, and code that *reads* a
+binding after passing it to a donating call dereferences a deleted buffer
+(an error jax only raises at runtime, on the composition that hits it).
+Two checks over ``runtime/steps.py``:
+
+* every ``jax.jit`` whose wrapped function takes a pool-named parameter
+  (``caches``/``pages``/``pool``/``page_pool``) lists that parameter in
+  ``donate_argnums``;
+* a def-use walk: any variable passed in a donated position of a call to a
+  known-donating jitted callable is never read later in the same function
+  without an intervening rebind.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from tools.analysis.core import (Finding, call_name, const_tuple,
+                                 enclosing_functions, rule)
+
+POOL_PARAMS = {"caches", "pages", "pool", "page_pool"}
+
+
+def _function_defs(tree: ast.Module) -> List[ast.FunctionDef]:
+    return [n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+
+def _resolve_def(defs: List[ast.FunctionDef], name: str,
+                 use_line: int) -> Optional[ast.FunctionDef]:
+    """The nearest def of ``name`` at or above ``use_line`` (lexical shadowing:
+    two branches may each define a local ``prefill_fn``)."""
+    best = None
+    for d in defs:
+        if d.name == name and d.lineno <= use_line:
+            if best is None or d.lineno > best.lineno:
+                best = d
+    return best
+
+
+def _donated(call: ast.Call) -> Optional[tuple]:
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            return const_tuple(kw.value)    # None if not a static literal
+    return ()
+
+
+def _jit_target(call: ast.Call) -> Optional[str]:
+    """Name of the locally-defined function wrapped by this jax.jit call."""
+    if call_name(call) != "jax.jit" or not call.args:
+        return None
+    fn = call.args[0]
+    return fn.id if isinstance(fn, ast.Name) else None
+
+
+@rule("donate-page-pool",
+      description="every jax.jit taking a page pool donates it; donated "
+                  "bindings are never read after the jitted call",
+      paths=("src/repro/runtime/steps.py",))
+def donate_page_pool(cache, sf) -> List[Finding]:
+    """Check donation at jit sites + def-use of donated args at call sites."""
+    out = []
+    defs = _function_defs(sf.tree)
+    owners = enclosing_functions(sf.tree)
+
+    # pass 1: jit sites — pool params must be in donate_argnums; remember
+    # which local names are bound to donating jitted callables
+    donating: Dict[str, tuple] = {}     # bound name -> donated indices
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call) or _jit_target(node) is None:
+            continue
+        target = _resolve_def(defs, _jit_target(node), node.lineno)
+        if target is None:
+            continue
+        params = [a.arg for a in target.args.args]
+        donated = _donated(node)
+        pool_idx = [i for i, p in enumerate(params) if p in POOL_PARAMS]
+        if donated is not None:
+            for i in pool_idx:
+                if i not in donated:
+                    out.append(Finding(
+                        "donate-page-pool", sf.rel, node.lineno,
+                        f"jax.jit({target.name}) takes the pool parameter "
+                        f"'{params[i]}' (arg {i}) but does not donate it — "
+                        f"add it to donate_argnums (pools are the dominant "
+                        f"serving tensors)"))
+        # name this jit is assigned to, for the def-use pass
+        owner_stmt = node
+        parent = owners.get(node)
+        for cand in ast.walk(parent if parent is not None else sf.tree):
+            if (isinstance(cand, ast.Assign) and cand.value is node
+                    and len(cand.targets) == 1
+                    and isinstance(cand.targets[0], ast.Name)):
+                donating[cand.targets[0].id] = donated or ()
+
+    # pass 2: def-use — donated arg bindings are dead after the call.
+    # Nodes are grouped by their *innermost* enclosing function so a call
+    # inside a nested def is not double-walked via its parent.
+    for fn in defs:
+        # collect (call_line, var_name) for donated positions
+        events: List[Tuple[int, str]] = []
+        for node in ast.walk(fn):
+            if owners.get(node) is not fn or not isinstance(node, ast.Call):
+                continue
+            callee = node.func
+            if not (isinstance(callee, ast.Name) and callee.id in donating):
+                continue
+            for i in donating[callee.id] or ():
+                if i < len(node.args) and isinstance(node.args[i], ast.Name):
+                    events.append((node.lineno, node.args[i].id))
+        if not events:
+            continue
+        assigns = []    # (line, name) rebinds
+        loads = []      # (line, name) reads
+        for node in ast.walk(fn):
+            if owners.get(node) is not fn or not isinstance(node, ast.Name):
+                continue
+            if isinstance(node.ctx, ast.Store):
+                assigns.append((node.lineno, node.id))
+            elif isinstance(node.ctx, ast.Load):
+                loads.append((node.lineno, node.id))
+        for call_line, var in events:
+            rebinds = [ln for ln, nm in assigns if nm == var and ln >= call_line]
+            next_rebind = min(rebinds) if rebinds else None
+            for ln, nm in loads:
+                if nm != var or ln <= call_line:
+                    continue
+                if next_rebind is not None and ln > next_rebind:
+                    continue
+                out.append(Finding(
+                    "donate-page-pool", sf.rel, ln,
+                    f"'{var}' read after being donated to a jitted call on "
+                    f"line {call_line} — the buffer is deleted; rebind or "
+                    f"reorder"))
+    return out

@@ -1,0 +1,46 @@
+"""Serving host-layer contract: scheduler/paged_cache/drafter are device-free.
+
+The PR 4 invariant: the scheduler state machine, the page allocator/block
+tables, and the drafter run on the host in plain numpy/python — the only
+device work per engine step is the fixed-shape jitted calls in
+``runtime/steps.py``. A stray ``jax``/``jnp`` import here is how host
+bookkeeping silently starts tracing, recompiling per queue shape, or
+holding device buffers the allocator thinks it freed.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.analysis.core import Finding, rule
+
+#: the host-only modules (engine.py is the device boundary and is exempt)
+HOST_ONLY = ("src/repro/serving/scheduler.py",
+             "src/repro/serving/paged_cache.py",
+             "src/repro/serving/drafter.py")
+
+BANNED_ROOTS = {"jax", "jaxlib"}
+
+
+@rule("host-layer-numpy-only",
+      description="serving host layer (scheduler/paged_cache/drafter) "
+                  "imports no jax — numpy/python only",
+      paths=HOST_ONLY)
+def host_layer_numpy_only(cache, sf) -> List[Finding]:
+    """Flag any import of jax/jaxlib (incl. ``from jax import …``)."""
+    out = []
+    for node in ast.walk(sf.tree):
+        mods = []
+        if isinstance(node, ast.Import):
+            mods = [a.name for a in node.names]
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            mods = [node.module]
+        for mod in mods:
+            if mod.split(".")[0] in BANNED_ROOTS:
+                out.append(Finding(
+                    "host-layer-numpy-only", sf.rel, node.lineno,
+                    f"import of '{mod}' in the serving host layer — "
+                    f"scheduler/paged_cache/drafter stay numpy/python "
+                    f"(device work belongs in the jitted steps)"))
+    return out

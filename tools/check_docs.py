@@ -28,6 +28,10 @@ import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))   # script invocation: make tools.* importable
+
+from tools.analysis.core import AstCache  # noqa: E402
+
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 
 
@@ -73,37 +77,35 @@ MD_REF_RE = re.compile(r"[A-Za-z0-9_][A-Za-z0-9_./-]*\.md\b")
 PY_DIRS = ("src", "tests", "tools", "benchmarks", "examples")
 
 
-def check_py_doc_refs() -> list:
+def check_py_doc_refs(cache: AstCache) -> list:
     """Flag repo-doc (.md) references in Python files that resolve nowhere.
 
     A reference counts as resolved if it exists relative to the repo root,
     the referencing file's directory, or docs/ (prose often drops the docs/
     prefix). Dotted module paths that merely end in ".md" cannot occur — the
-    regex requires the .md to terminate the token.
+    regex requires the .md to terminate the token. Files come from the shared
+    sparklint AST cache (``tools/analysis``) so the docs job and the lint
+    job read one analysis substrate.
     """
     problems = []
-    for d in PY_DIRS:
-        base = ROOT / d
-        if not base.is_dir():
-            continue
-        for py in sorted(base.rglob("*.py")):
-            if "__pycache__" in py.parts:
-                continue
-            for lineno, line in enumerate(py.read_text().splitlines(), 1):
-                for ref in MD_REF_RE.findall(line):
-                    name = ref.lstrip("./")
-                    candidates = (ROOT / name, py.parent / name,
-                                  ROOT / "docs" / name)
-                    if not any(c.exists() for c in candidates):
-                        problems.append(
-                            f"{py.relative_to(ROOT)}:{lineno}: reference to "
-                            f"nonexistent repo doc '{ref}'")
+    for sf in cache.iter_python(*PY_DIRS):
+        for lineno, line in enumerate(sf.lines, 1):
+            for ref in MD_REF_RE.findall(line):
+                name = ref.lstrip("./")
+                candidates = (ROOT / name, sf.path.parent / name,
+                              ROOT / "docs" / name)
+                if not any(c.exists() for c in candidates):
+                    problems.append(
+                        f"{sf.rel}:{lineno}: reference to "
+                        f"nonexistent repo doc '{ref}'")
     return problems
 
 
 # packages with doc pages narrating their internals — keep the code
 # self-describing so the narration has something stable to point at
-DOCSTRING_PKGS = ("src/repro/serving", "src/repro/kernels", "src/repro/perf")
+# (tools/analysis: docs/analysis.md narrates every sparklint rule)
+DOCSTRING_PKGS = ("src/repro/serving", "src/repro/kernels", "src/repro/perf",
+                  "tools/analysis")
 
 
 def _missing_docstrings(tree: ast.Module, relpath: str) -> list:
@@ -138,31 +140,28 @@ def _missing_docstrings(tree: ast.Module, relpath: str) -> list:
     return problems
 
 
-def check_docstring_coverage() -> list:
+def check_docstring_coverage(cache: AstCache) -> list:
     """Every public module/function/class/method in DOCSTRING_PKGS has a
-    docstring (private names and non-Python files are skipped)."""
+    docstring (private names and non-Python files are skipped). Parsed
+    modules come from the shared sparklint AST cache — each file is parsed
+    once per run, no private parsing loop here."""
     problems = []
     for pkg in DOCSTRING_PKGS:
-        base = ROOT / pkg
-        if not base.is_dir():
+        if not (ROOT / pkg).is_dir():
             problems.append(f"{pkg}: package missing")
             continue
-        for py in sorted(base.rglob("*.py")):
-            if "__pycache__" in py.parts:
+        for sf in cache.iter_python(pkg):
+            if sf.tree is None:
+                problems.append(f"{sf.rel}: unparsable ({sf.parse_error})")
                 continue
-            rel = str(py.relative_to(ROOT))
-            try:
-                tree = ast.parse(py.read_text())
-            except SyntaxError as e:
-                problems.append(f"{rel}: unparsable ({e})")
-                continue
-            problems.extend(_missing_docstrings(tree, rel))
+            problems.extend(_missing_docstrings(sf.tree, sf.rel))
     return problems
 
 
 def main() -> int:
+    cache = AstCache(ROOT)
     problems = (check_links() + check_architecture_coverage()
-                + check_py_doc_refs() + check_docstring_coverage())
+                + check_py_doc_refs(cache) + check_docstring_coverage(cache))
     for p in problems:
         print(p)
     print(f"check_docs: {'FAIL' if problems else 'ok'} "
