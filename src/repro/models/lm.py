@@ -64,10 +64,12 @@ def _apply_block(p, x, ctx: Ctx, cfg, kind: str, *, positions, cache,
             layer_seed=layer_seed, segment_ids=segment_ids, paged=paged)
     elif kind == "rec":
         mixed, new_cache = rglru.apply_rglru(p["mixer"], h, ctx, cfg,
-                                             cache=cache)
+                                             cache=cache, positions=positions,
+                                             paged=paged)
     else:
         mixed, new_cache = mamba.apply_mamba(p["mixer"], h, ctx, cfg,
-                                             cache=cache)
+                                             cache=cache, positions=positions,
+                                             paged=paged)
     x = x + mixed
     if "mlp" in p:
         h = layers.rms_norm(x, p["norm2"])
@@ -361,46 +363,64 @@ def decode_step(cfg, params, ctx: Ctx, token, caches, position):
 # ---------------------------------------------------------------------------
 
 def init_paged_cache(cfg, paged_cfg, dtype=None):
-    """Per-layer page pools [Hkv, num_pages, page_size, D] (no batch dim —
-    sequences share the pool via block tables). Attention-only archs:
-    recurrent/SSM state is per-row and packing would smear it across prompts."""
-    assert all(k == "attn" for k in cfg.block_pattern), \
-        f"paged serving supports attention-only archs, got {cfg.block_pattern}"
+    """Serving cache per layer kind: attention blocks get page pools
+    [Hkv, num_pages, page_size, D] (no batch dim — sequences share the pool
+    via block tables); recurrent/SSM blocks get fixed per-slot state rows
+    [max_batch + 1, ...] — O(1) per sequence, slot i backing decode slot i,
+    plus one trailing *trash row* (index -1) that absorbs padding-token
+    gathers/scatters exactly like the pool's trash page.  Host-side slot
+    lifecycle lives in serving/state_cache.py."""
     dtype = dtype or cfg.dtype
     period, n_super, rem = _block_kinds(cfg)
 
-    def one():
-        return layers.init_paged_attn_cache(cfg, paged_cfg, dtype)
+    def one(kind):
+        if kind == "attn":
+            return layers.init_paged_attn_cache(cfg, paged_cfg, dtype)
+        rows = paged_cfg.max_batch + 1        # + the trailing trash row
+        if kind == "rec":
+            return rglru.init_rglru_cache(cfg, rows)
+        return mamba.init_mamba_cache(cfg, rows)
 
     caches = {}
     if n_super > 0:
         caches["blocks"] = {
             f"sub_{j}": jax.tree.map(
                 lambda x: jnp.broadcast_to(x, (n_super,) + x.shape).copy(),
-                one())
+                one(cfg.block_pattern[j]))
             for j in range(period)}
     if rem:
-        caches["tail"] = {f"tail_{r}": one() for r in range(rem)}
+        caches["tail"] = {f"tail_{r}": one(cfg.block_pattern[
+            (n_super * period + r) % period]) for r in range(rem)}
     return caches
 
 
 def paged_prefill(cfg, params, ctx: Ctx, tokens, segment_ids, positions, dest,
-                  caches):
+                  caches, state_slots=None):
     """Segment-aware packed prefill: many prompts in one fused forward.
 
     tokens/segment_ids/positions [B, S] (prompts packed along S, -1 = pad,
     per-prompt positions restarting at 0); dest [B, S] flat page-pool token
     slots from BlockTables.prefill_dest. Returns (logits [B, S, Vpad], caches)
     — the engine reads each prompt's last-token row.
+
+    state_slots [B, S] (hybrid SSM/recurrent archs): each token's decode
+    slot, -1 for padding — recurrent blocks reset their scan at every span
+    start and scatter span-end state into the slot's state row.  Classic
+    prefill spans always start at position 0, so the per-segment positions
+    double as the within-span offsets (state_local).
     """
+    paged = {"dest": dest}
+    if state_slots is not None:
+        paged.update(state_slots=state_slots, state_local=positions)
     logits, caches, _ = forward(cfg, params, ctx, tokens=tokens, caches=caches,
                                 positions=positions, segment_ids=segment_ids,
-                                paged={"dest": dest})
+                                paged=paged)
     return logits, caches
 
 
 def paged_chunk_prefill(cfg, params, ctx: Ctx, tokens, positions, dest,
-                        token_tables, token_kv_len, caches):
+                        token_tables, token_kv_len, caches,
+                        state_slots=None, state_local=None):
     """Chunked / suffix packed prefill: prompt spans whose earlier tokens
     already live in pages (prefix-cache hits, earlier chunks of the same
     prompt).
@@ -415,11 +435,19 @@ def paged_chunk_prefill(cfg, params, ctx: Ctx, tokens, positions, dest,
     predecessors alike — so no segment ids are needed (isolation comes from
     the tables).  Returns (logits [B, S, Vpad], caches); the engine reads a
     prompt's last-token row when its final chunk lands.
+
+    state_slots/state_local [B, S] (hybrid SSM/recurrent archs): each
+    token's decode slot (-1 pad) and offset within its span — a span whose
+    global start (position - local) is past 0 resumes the slot's stored
+    recurrent state (the previous chunk's span-end scatter).
     """
+    paged = {"dest": dest, "token_tables": token_tables,
+             "token_kv_len": token_kv_len}
+    if state_slots is not None:
+        paged.update(state_slots=state_slots, state_local=state_local)
     logits, caches, _ = forward(
         cfg, params, ctx, tokens=tokens, caches=caches, positions=positions,
-        paged={"dest": dest, "token_tables": token_tables,
-               "token_kv_len": token_kv_len})
+        paged=paged)
     return logits, caches
 
 

@@ -93,16 +93,88 @@ def _ssm_step(u, dt, B, C, A, D, h_prev):
     return y, h
 
 
-def apply_mamba(p, x, ctx: layers.Ctx, cfg, *, cache=None):
-    """x: [B,S,d]. cache (decode): {'h': [B,Di,N] f32, 'conv': [B,K-1,Di]}."""
-    from repro.models.rglru import _conv1d_causal
+def _ssm_scan_packed(u, dt, B, C, A, D, state_h, slots, is_start, inject,
+                     is_end, *, chunk: int = 256):
+    """Multi-span chunked selective scan (packed paged prefill).
+
+    Like :func:`_ssm_scan`, but the recurrence resets at span starts
+    (``a_bar`` zeroed there, so the in-chunk associative scan and the
+    cross-chunk ``h_prev`` carry both respect span boundaries), continuation
+    spans resume from their slot's row of ``state_h`` [n_slots+1, Di, N]
+    (``inject`` adds ``a_bar·h_init`` into the start's source term — the
+    sequential step's exact arithmetic), and each span-end h scatters back
+    to its slot's row inside the chunk scan (non-ends collapse onto the
+    trailing trash row).  Returns (y [B,S,Di] f32, new state_h)."""
+    bsz, s, di = u.shape
+    n = A.shape[1]
+    if s % chunk != 0:
+        chunk = s
+    n_chunks = s // chunk
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    def chunk_body(carry, inputs):
+        h_prev, st = carry
+        u_c, dt_c, b_c, c_c, sl_c, start_c, inj_c, end_c = inputs
+        a_bar = jnp.exp(dt_c[..., None] * A)         # [B,chunk,Di,N]
+        bx = (dt_c * u_c)[..., None] * b_c[:, :, None, :]
+        h_init = st[sl_c]                            # [B,chunk,Di,N]
+        bx = bx + jnp.where(inj_c, 1.0, 0.0)[..., None, None] * a_bar * h_init
+        a_eff = a_bar * jnp.where(start_c, 0.0, 1.0)[..., None, None]
+        a_cum, h_in = jax.lax.associative_scan(combine, (a_eff, bx), axis=1)
+        h = h_in + a_cum * h_prev[:, None]
+        y_c = jnp.einsum("bsdn,bsn->bsd", h, c_c)
+        idx = jnp.where(end_c, sl_c, -1).reshape(-1)
+        st = st.at[idx].set(h.reshape(-1, di, n))
+        return (h[:, -1], st), y_c
+
+    split = lambda x: x.reshape(bsz, n_chunks, chunk, *x.shape[2:]
+                                ).transpose(1, 0, 2, *range(3, x.ndim + 1))
+    h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    (_, st), yc = jax.lax.scan(
+        chunk_body, (h0, state_h),
+        (split(u), split(dt), split(B), split(C),
+         split(slots), split(is_start), split(inject), split(is_end)))
+    y = yc.transpose(1, 0, 2, 3).reshape(bsz, s, di)
+    return y + D * u, st
+
+
+def apply_mamba(p, x, ctx: layers.Ctx, cfg, *, cache=None, positions=None,
+                paged=None):
+    """x: [B,S,d]. cache (decode): {'h': [B,Di,N] f32, 'conv': [B,K-1,Di]}.
+
+    paged (serving): per-slot state protocol — cache rows are
+    [n_slots+1, ...] (trailing trash row); prefill spans route through
+    paged["state_slots"]/["state_local"], decode updates rows [:B] gated
+    on paged["kv_len"] > 0 (see rglru.apply_rglru)."""
+    from repro.models.rglru import (_conv1d_causal, _conv1d_causal_packed,
+                                    _conv_state_of, _packed_seg,
+                                    _scatter_state)
     b, s, d = x.shape
     h_in = x @ p["in_proj"]
     h_in = ctx.c(h_in, "batch", "seq", "rnn")
     u, z = jnp.split(h_in, 2, axis=-1)
 
-    conv_state = cache["conv"] if cache is not None else None
-    u, new_conv = _conv1d_causal(u, p["conv"], conv_state)
+    packed = paged is not None and not ctx.decode
+    if packed:
+        if "state_slots" not in paged:
+            raise ValueError(
+                "recurrent paged prefill needs state routing — pass "
+                "state_slots/state_local (lm.paged_prefill/"
+                "paged_chunk_prefill)")
+        slots, local, is_start, inject, is_end = _packed_seg(paged, positions)
+        u, lags = _conv1d_causal_packed(u, p["conv"], cache["conv"], slots,
+                                        local,
+                                        jnp.broadcast_to(positions,
+                                                         slots.shape))
+        new_conv = None
+    else:
+        conv_state = (cache["conv"][:b] if paged is not None
+                      else cache["conv"] if cache is not None else None)
+        u, new_conv = _conv1d_causal(u, p["conv"], conv_state)
     u = jax.nn.silu(u).astype(jnp.float32)
 
     bc = (u.astype(x.dtype) @ p["w_bc"]).astype(jnp.float32)
@@ -115,10 +187,27 @@ def apply_mamba(p, x, ctx: layers.Ctx, cfg, *, cache=None):
     new_cache = None
     if ctx.decode:
         assert s == 1 and cache is not None
+        h_prev = cache["h"][:b] if paged is not None else cache["h"]
         y, h_new = _ssm_step(u[:, 0], dt[:, 0], Bm[:, 0], Cm[:, 0], A, p["D"],
-                             cache["h"])
-        new_cache = {"h": h_new, "conv": new_conv}
+                             h_prev)
+        if paged is not None:
+            live = (paged["kv_len"] > 0)[:, None]
+            new_cache = {
+                "h": cache["h"].at[:b].set(
+                    jnp.where(live[..., None], h_new, h_prev)),
+                "conv": cache["conv"].at[:b].set(jnp.where(
+                    live[:, None], new_conv.astype(cache["conv"].dtype),
+                    cache["conv"][:b]))}
+        else:
+            new_cache = {"h": h_new, "conv": new_conv}
         y = y[:, None, :]
+    elif packed:
+        y, new_h = _ssm_scan_packed(u, dt, Bm, Cm, A, p["D"], cache["h"],
+                                    slots, is_start, inject, is_end)
+        new_cache = {
+            "h": new_h,
+            "conv": _scatter_state(cache["conv"], _conv_state_of(lags),
+                                   slots, is_end)}
     else:
         y, h_last = _ssm_scan(u, dt, Bm, Cm, A, p["D"])
         if cache is not None:

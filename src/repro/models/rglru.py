@@ -57,6 +57,82 @@ def _conv1d_causal(x, w, state=None):
     return y, new_state
 
 
+# ---------------------------------------------------------------------------
+# packed per-slot state routing (paged serving prefill)
+#
+# A packed prefill row holds one or more prompt *spans* back to back (trailing
+# padding).  Recurrent state must reset at every span start — and a span that
+# resumes a sequence mid-prompt (chunked prefill) must resume from the state
+# its slot's row stored after the previous chunk.  The helpers below are
+# shared by the rgLRU and mamba mixers; both keep their serving state in rows
+# [n_slots + 1, ...] where the trailing row (index -1) is a *trash row*
+# absorbing padding-token gathers and non-end scatters, mirroring the page
+# pool's trash page.
+# ---------------------------------------------------------------------------
+
+def _packed_seg(paged, positions):
+    """Per-token span fields from the paged routing dict.
+
+    paged["state_slots"] [B,S]: each token's decode slot (-1 = padding);
+    paged["state_local"] [B,S]: its offset within its span.  Returns
+    (slots, local, is_start, inject, is_end): span-start mask, carried-state
+    injection mask (span starts that resume past global position 0), and
+    span-end mask (the token whose state the caller scatters back)."""
+    slots = paged["state_slots"]
+    local = paged["state_local"]
+    positions = jnp.broadcast_to(positions, slots.shape)
+    live = slots >= 0
+    is_start = live & (local == 0)
+    cont = live & (positions - local > 0)     # span resumes mid-sequence
+    nxt = jnp.concatenate([slots[:, 1:],
+                           jnp.full_like(slots[:, :1], -1)], axis=1)
+    is_end = live & (slots != nxt)
+    return slots, local, is_start, is_start & cont, is_end
+
+
+def _conv1d_causal_packed(x, w, state, slots, local, positions):
+    """Packed multi-span depthwise causal conv with per-slot carried state.
+
+    x [B,S,D]; w [K,D]; state [n_slots+1, K-1, D] (state[j] holds the input
+    at lag K-1-j relative to the span start, trailing row = trash).  A lag-l
+    read stays in-row while ``local >= l`` (spans are contiguous), falls back
+    to the slot's carried state for continuation spans, and is zero for a
+    fresh span's pre-history.  Returns (y, lags): lags[l] is each token's
+    lag-l input — the caller stacks lags at span ends into the new conv
+    state (state_new[j] = lag K-2-j, i.e. the history the *next* token
+    would need)."""
+    k = w.shape[0]
+    s = x.shape[1]
+    cont = (slots >= 0) & (positions - local > 0)
+    lags = [x]
+    for lag in range(1, k):
+        in_row = jnp.pad(x, ((0, 0), (lag, 0), (0, 0)))[:, :s]
+        j = jnp.clip(k - 1 - lag + local, 0, k - 2)
+        carried = state[slots, j].astype(x.dtype)
+        lags.append(jnp.where((local >= lag)[..., None], in_row,
+                              jnp.where(cont[..., None], carried,
+                                        jnp.zeros_like(x))))
+    y = sum(w[k - 1 - lag] * lags[lag] for lag in range(k))
+    return y, lags
+
+
+def _conv_state_of(lags):
+    """Stack per-token lag values into conv-state rows [B,S,K-1,D]
+    (state_new[j] = lag K-2-j — what the next token's conv needs)."""
+    k = len(lags)
+    return jnp.stack([lags[k - 2 - j] for j in range(k - 1)], axis=2)
+
+
+def _scatter_state(state, values, slots, is_end):
+    """Write per-token values [B,S,...] into state rows [n_slots+1, ...] at
+    span-end tokens; every non-end token collapses onto the trailing trash
+    row (index -1).  At most one span per slot per call (the engine packs
+    one span per sequence per row), so real rows see at most one write."""
+    idx = jnp.where(is_end, slots, -1).reshape(-1)
+    flat = values.reshape((-1,) + values.shape[2:])
+    return state.at[idx].set(flat.astype(state.dtype))
+
+
 def _rglru_scan(x, r, i, lam):
     """x,r,i: [B,S,D] f32. Returns h [B,S,D] via associative scan."""
     log_a = -_C * jax.nn.softplus(lam) * r          # log a_t  (a_t ∈ (0,1))
@@ -79,13 +155,86 @@ def _rglru_step(x, r, i, lam, h_prev):
     return h
 
 
-def apply_rglru(p, x, ctx: layers.Ctx, cfg, *, cache=None):
-    """x: [B, S, d]. cache (decode): {'h': [B,Dr] f32, 'conv': [B,3,Dr]}."""
+def _rglru_scan_packed(x, r, i, lam, h_init, is_start, inject):
+    """Multi-span associative scan: like :func:`_rglru_scan` but the
+    recurrence resets at span starts and continuation spans resume from
+    ``h_init`` [B,S,D] (their slot's stored state, gathered per token).
+    Zeroing ``a_t`` at span starts makes one flat scan respect every span
+    boundary; adding ``a_t·h_init`` into the injected start's source term
+    reproduces the sequential step ``h = a·h_prev + gated`` exactly there."""
+    log_a = -_C * jax.nn.softplus(lam) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x)
+    gated = gated + jnp.where(inject, 1.0, 0.0)[..., None] * a * h_init
+    a_eff = a * jnp.where(is_start, 0.0, 1.0)[..., None]
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a_eff, gated), axis=1)
+    return h
+
+
+def apply_rglru(p, x, ctx: layers.Ctx, cfg, *, cache=None, positions=None,
+                paged=None):
+    """x: [B, S, d]. cache (decode): {'h': [B,Dr] f32, 'conv': [B,3,Dr]}.
+
+    paged (serving): switches to the per-slot state protocol — cache rows
+    are [n_slots+1, ...] (trailing trash row).  Prefill routes spans via
+    paged["state_slots"]/["state_local"] (packed multi-span scan with
+    zero-or-carried initial state, span-end states scattered back); decode
+    updates rows [:B], gated on paged["kv_len"] > 0 so masked/inactive
+    slots keep their state untouched."""
     b, s, d = x.shape
     xr = x @ p["wx"]                                  # recurrence branch
     xr = ctx.c(xr, "batch", "seq", "rnn")
     gate = jax.nn.gelu(x @ p["wg"])                   # gate branch
     gate = ctx.c(gate, "batch", "seq", "rnn")
+
+    if paged is not None:
+        assert cache is not None, "paged serving always threads state rows"
+        if ctx.decode:
+            xr, new_conv = _conv1d_causal(xr, p["conv"], cache["conv"][:b])
+            xf = xr.astype(jnp.float32)
+            r = jax.nn.sigmoid(xf @ p["w_rec"].astype(jnp.float32))
+            i = jax.nn.sigmoid(xf @ p["w_inp"].astype(jnp.float32))
+            h = _rglru_step(xf[:, 0], r[:, 0], i[:, 0], p["lambda"],
+                            cache["h"][:b])
+            live = (paged["kv_len"] > 0)[:, None]
+            new_cache = {
+                "h": cache["h"].at[:b].set(
+                    jnp.where(live, h, cache["h"][:b])),
+                "conv": cache["conv"].at[:b].set(jnp.where(
+                    live[:, None], new_conv.astype(cache["conv"].dtype),
+                    cache["conv"][:b]))}
+            h = h[:, None, :]
+        else:
+            if "state_slots" not in paged:
+                raise ValueError(
+                    "recurrent paged prefill needs state routing — pass "
+                    "state_slots/state_local (lm.paged_prefill/"
+                    "paged_chunk_prefill)")
+            slots, local, is_start, inject, is_end = _packed_seg(
+                paged, positions)
+            xr, lags = _conv1d_causal_packed(xr, p["conv"], cache["conv"],
+                                             slots, local,
+                                             jnp.broadcast_to(positions,
+                                                              slots.shape))
+            xf = xr.astype(jnp.float32)
+            r = jax.nn.sigmoid(xf @ p["w_rec"].astype(jnp.float32))
+            i = jax.nn.sigmoid(xf @ p["w_inp"].astype(jnp.float32))
+            h = _rglru_scan_packed(xf, r, i, p["lambda"],
+                                   cache["h"][slots].astype(jnp.float32),
+                                   is_start, inject)
+            new_cache = {
+                "h": _scatter_state(cache["h"], h, slots, is_end),
+                "conv": _scatter_state(cache["conv"], _conv_state_of(lags),
+                                       slots, is_end)}
+        h = ctx.c(h.astype(x.dtype), "batch", "seq", "rnn")
+        out = (h * gate) @ p["wo"]
+        return ctx.c(out, "batch", "seq", "embed"), new_cache
 
     conv_state = cache["conv"] if cache is not None else None
     xr, new_conv = _conv1d_causal(xr, p["conv"], conv_state)

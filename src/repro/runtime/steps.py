@@ -157,15 +157,23 @@ def make_serve_steps(cfg, *, mesh=None, impl: str = "xla", max_len: int = 2048,
     prefill (the serving subsystem's jitted steps; see docs/serving.md).
     The paged signatures differ from the contiguous ones:
 
-      prefill_fn(params, tokens, segment_ids, positions, dest, caches)
+      prefill_fn(params, tokens, segment_ids, positions, dest, state_slots,
+                 caches)
           → (logits [B,S,Vpad], caches)     # packed prompts, B prefill rows
       decode_fn(params, token, caches, block_tables, kv_len)
           → (logits [B,Vpad], caches)       # B = paged.max_batch slots
       chunk_prefill_fn(params, tokens, positions, dest, token_tables,
-                       token_kv_len, caches)
+                       token_kv_len, state_slots, state_local, caches)
           → (logits [B,S,Vpad], caches)     # chunked/suffix prefill spans
                                             # (global positions; per-token
                                             # block-table attention)
+
+    state_slots/state_local [B,S] route hybrid SSM/recurrent archs' fixed
+    per-slot state rows (each token's decode slot and within-span offset;
+    -1/0 for padding) — attention-only archs pass them too and XLA prunes
+    the unused inputs.  Decode derives row liveness from kv_len > 0, so its
+    signature is unchanged; the verify step stays attention-only (the
+    engine rejects speculation on recurrent archs — state can't roll back).
       verify_fn(params, tokens, positions, dest, token_tables,
                 token_kv_len, caches)
           → (logits [B,W,Vpad], caches)     # speculative verify-k: same
@@ -200,19 +208,27 @@ def make_serve_steps(cfg, *, mesh=None, impl: str = "xla", max_len: int = 2048,
         def cache_init():
             caches = lm.init_paged_cache(cfg, paged)
             if mesh is not None:
-                # leaf [(n_super,) Hkv, num_pages, page_size, D]: the page
-                # axis is always ndim-3
-                caches = jax.device_put(caches, jax.tree.map(
-                    lambda x: NamedSharding(
-                        mesh, P(*(None,) * (x.ndim - 3), "model", None, None)),
-                    caches))
+                # pool leaf [(n_super,) Hkv, num_pages, page_size, D]: the
+                # page axis is always ndim-3 and shards over the model axis;
+                # recurrent-state rows (hybrid archs) are tiny and replicate
+                from jax.tree_util import tree_map_with_path
+
+                def put(path, x):
+                    pool = getattr(path[-1], "key", None) in ("k_pages",
+                                                              "v_pages")
+                    spec = (P(*(None,) * (x.ndim - 3), "model", None, None)
+                            if pool else P())
+                    return jax.device_put(x, NamedSharding(mesh, spec))
+
+                caches = tree_map_with_path(put, caches)
             return caches
 
-        def prefill_fn(params, tokens, segment_ids, positions, dest, caches):
+        def prefill_fn(params, tokens, segment_ids, positions, dest,
+                       state_slots, caches):
             ctx = _make_ctx(cfg, rules, impl, 0, True, xla_chunk=xla_chunk,
                             xla_unroll=xla_unroll, mesh=mesh)
             return lm.paged_prefill(cfg, params, ctx, tokens, segment_ids,
-                                    positions, dest, caches)
+                                    positions, dest, caches, state_slots)
 
         def decode_fn(params, token, caches, block_tables, kv_len):
             ctx = _make_ctx(cfg, rules_dec, impl, 0, True, xla_chunk=xla_chunk,
@@ -222,12 +238,12 @@ def make_serve_steps(cfg, *, mesh=None, impl: str = "xla", max_len: int = 2048,
                                         block_tables, kv_len)
 
         def chunk_prefill_fn(params, tokens, positions, dest, token_tables,
-                             token_kv_len, caches):
+                             token_kv_len, state_slots, state_local, caches):
             ctx = _make_ctx(cfg, rules, impl, 0, True, xla_chunk=xla_chunk,
                             xla_unroll=xla_unroll, mesh=mesh)
             return lm.paged_chunk_prefill(cfg, params, ctx, tokens, positions,
                                           dest, token_tables, token_kv_len,
-                                          caches)
+                                          caches, state_slots, state_local)
 
         def verify_fn(params, tokens, positions, dest, token_tables,
                       token_kv_len, caches):
@@ -243,10 +259,10 @@ def make_serve_steps(cfg, *, mesh=None, impl: str = "xla", max_len: int = 2048,
         # all steps donate the page pools (the dominant serving tensors):
         # the caller always threads the returned caches into the next call
         return ServeArtifacts(prefill_fn=jax.jit(prefill_fn,
-                                                 donate_argnums=(5,)),
+                                                 donate_argnums=(6,)),
                               decode_fn=jax.jit(decode_fn, donate_argnums=(2,)),
                               chunk_prefill_fn=jax.jit(chunk_prefill_fn,
-                                                       donate_argnums=(6,)),
+                                                       donate_argnums=(8,)),
                               verify_fn=jax.jit(verify_fn, donate_argnums=(6,)),
                               cache_init_fn=cache_init, rules=rules,
                               rules_decode=rules_dec)

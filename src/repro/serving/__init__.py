@@ -11,6 +11,10 @@ idea, built on this repo's scalar-prefetch ragged-skip machinery):
                      index, block tables (per-block ownership: lazy growth,
                      out-of-window reclamation, prefix sharing with
                      copy-on-write), scatter math.
+* ``state_cache``  — per-slot recurrent-state bookkeeping for hybrid
+                     SSM/recurrent archs (mamba, rgLRU): O(1) state rows
+                     managed next to the page pool, admitted/released by
+                     the same scheduler decisions that bind a slot's pages.
 * ``drafter``      — prompt-lookup (n-gram) draft proposer + the greedy
                      longest-prefix acceptance rule for speculative decoding
                      (``ServingEngine(speculate_k=...)``); no second model.
@@ -41,9 +45,10 @@ from repro.serving.paged_cache import (BlockTables, PageAllocator,
                                        PagedCacheConfig, PrefixIndex,
                                        TRASH_PAGE)
 from repro.serving.scheduler import ActiveSeq, Request, Scheduler
+from repro.serving.state_cache import StateCache
 
 __all__ = [
     "ServingEngine", "BlockTables", "PageAllocator", "PagedCacheConfig",
     "PrefixIndex", "TRASH_PAGE", "ActiveSeq", "Request", "Scheduler",
-    "NgramDrafter", "longest_accept",
+    "NgramDrafter", "longest_accept", "StateCache",
 ]

@@ -53,6 +53,22 @@ ever covers them.  Greedy acceptance makes the generation token-identical to
 plain single-step decode by construction (the composition matrix in
 tests/test_speculative.py pins this across every serving feature).
 
+Hybrid SSM/recurrent archs (mamba, rgLRU — falcon_mamba, recurrentgemma):
+every recurrent layer keeps one fixed state row per decode slot (plus a
+trailing trash row), admitted/released by the same scheduler calls that
+bind a slot's pages (serving/state_cache.py).  Prefill spans route through
+per-token ``state_slots``/``state_local`` — the packed scan resets at span
+starts, a chunked continuation resumes the slot's stored state, and span-end
+state scatters back to the row; decode updates rows gated on ``kv_len > 0``
+so masked and inactive slots never move.  Correctness never reads a released
+row: a re-admitted slot's first span starts at position 0, which injects a
+fresh zero state (``poison_reclaimed`` clobbers released rows to prove it).
+Preempted rows re-prefill prompt+generated from position 0, exactly like the
+attention path.  Prefix sharing and speculation are attention-only (the
+index certifies KV pages, not state; cumulative state cannot roll back) and
+raise on recurrent archs.  MoE archs serve unchanged — expert routing is
+stateless per token.
+
 The jitted steps see fixed shapes only — [B=max_batch] decode rows, packed
 prefill rows of ``prefill_len``, [B, k+1] verify rows — so the whole ragged,
 churning workload runs on a handful of compilations; growth/preemption/
@@ -76,12 +92,25 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.tree_util import tree_map_with_path
 
 from repro.models.layers import paged_decode_window
 from repro.runtime.steps import make_serve_steps
 from repro.serving.drafter import NgramDrafter, longest_accept
 from repro.serving.paged_cache import PagedCacheConfig, TRASH_PAGE
 from repro.serving.scheduler import ActiveSeq, Request, Scheduler
+
+
+def _map_pool_leaves(caches, fn):
+    """Apply ``fn`` to the attention page-pool leaves (k_pages/v_pages)
+    only.  Hybrid archs' recurrent-state leaves live in the same cache tree
+    with a different layout — per-slot rows, not pages — so page-indexed
+    ops (COW copies, reclaimed-page poisoning) must skip them."""
+    def g(path, x):
+        if getattr(path[-1], "key", None) in ("k_pages", "v_pages"):
+            return fn(x)
+        return x
+    return tree_map_with_path(g, caches)
 
 
 class ServingEngine:
@@ -137,6 +166,17 @@ class ServingEngine:
         self.num_splits = num_splits
         if speculate_k is not None and speculate_k < 0:
             raise ValueError("speculate_k must be a non-negative draft width")
+        self.has_state = any(k != "attn" for k in cfg.block_pattern)
+        if self.has_state and share_prefix:
+            raise ValueError(
+                "prefix sharing is attention-only: the prefix index "
+                "certifies cached KV pages, not recurrent state — a hit "
+                "would skip the state computation a resumed scan needs")
+        if self.has_state and speculate_k:
+            raise ValueError(
+                "speculative decoding is attention-only: recurrent state "
+                "is cumulative, so rejected drafts cannot be rolled back "
+                "logically the way out-of-kv_len page writes can")
         self.speculate_k = int(speculate_k or 0)
         self.drafter = (NgramDrafter(self.speculate_k)
                         if self.speculate_k else None)
@@ -249,6 +289,7 @@ class ServingEngine:
             tokens = np.zeros((1, self.prefill_len), np.int32)
             seg = np.full((1, self.prefill_len), -1, np.int32)
             pos = np.zeros((1, self.prefill_len), np.int32)
+            slots = np.full((1, self.prefill_len), -1, np.int32)
             off = 0
             last_idx = []
             for i, seq in enumerate(row):
@@ -256,12 +297,14 @@ class ServingEngine:
                 tokens[0, off:off + n] = seq.request.tokens
                 seg[0, off:off + n] = i
                 pos[0, off:off + n] = np.arange(n)
+                slots[0, off:off + n] = seq.slot
                 last_idx.append(off + n - 1)
                 off += n
             dest = tables.prefill_dest(seg[0], [s.slot for s in row])
             logits, self.caches = self.prefill_fn(
                 self.params, jnp.asarray(tokens), jnp.asarray(seg),
-                jnp.asarray(pos), jnp.asarray(dest[None]), self.caches)
+                jnp.asarray(pos), jnp.asarray(dest[None]),
+                jnp.asarray(slots), self.caches)
             logits = np.asarray(logits[0, :, :self.cfg.vocab_size])
             for seq, li in zip(row, last_idx):
                 tables.kv_len[seq.slot] = seq.request.prompt_len
@@ -294,6 +337,8 @@ class ServingEngine:
             ttab = np.full((1, width, self.pcfg.max_pages_per_seq),
                            TRASH_PAGE, np.int32)
             dest = np.zeros((1, width), np.int32)  # pad → trash slot 0
+            slots = np.full((1, width), -1, np.int32)
+            local = np.zeros((1, width), np.int32)
             off = 0
             marks = []
             for seq, a, b in row:
@@ -303,12 +348,14 @@ class ServingEngine:
                 kvl[0, off:off + n] = np.arange(a, b) + 1
                 ttab[0, off:off + n] = tables.tables[seq.slot]
                 dest[0, off:off + n] = tables.span_dest(seq.slot, a, b)
+                slots[0, off:off + n] = seq.slot
+                local[0, off:off + n] = np.arange(n)
                 marks.append((seq, b, off + n - 1))
                 off += n
             logits, self.caches = self.chunk_prefill_fn(
                 self.params, jnp.asarray(tokens), jnp.asarray(pos),
                 jnp.asarray(dest), jnp.asarray(ttab), jnp.asarray(kvl),
-                self.caches)
+                jnp.asarray(slots), jnp.asarray(local), self.caches)
             logits = np.asarray(logits[0, :, :self.cfg.vocab_size])
             for seq, end, li in marks:
                 seq.prefilled = end
@@ -453,8 +500,9 @@ class ServingEngine:
         src = jnp.asarray([s for s, _ in pairs], jnp.int32)
         dst = jnp.asarray([d for _, d in pairs], jnp.int32)
         # the page axis of every pool leaf is ndim-3 ([... Hkv, P, ps, D])
-        self.caches = jax.tree.map(
-            lambda x: x.at[..., dst, :, :].set(x[..., src, :, :]), self.caches)
+        self.caches = _map_pool_leaves(
+            self.caches,
+            lambda x: x.at[..., dst, :, :].set(x[..., src, :, :]))
 
     def _poison_pages(self, pages: List[int]):
         """Test hook: clobber freed pages (plus the trash page their table
@@ -464,8 +512,39 @@ class ServingEngine:
         reclamation test asserts token-identity under this hook."""
         idx = jnp.asarray(sorted(set(pages) | {TRASH_PAGE}), jnp.int32)
         # the page axis of every pool leaf is ndim-3 ([... Hkv, P, ps, D])
-        self.caches = jax.tree.map(
-            lambda x: x.at[..., idx, :, :].set(1e6), self.caches)
+        self.caches = _map_pool_leaves(
+            self.caches, lambda x: x.at[..., idx, :, :].set(1e6))
+
+    def _poison_state(self, slots: List[int]):
+        """Test hook: clobber released recurrent-state rows (plus the
+        trailing trash row) with 1e6 — any read of dead state then corrupts
+        generations instead of passing silently.  1e6 rather than NaN
+        because legitimately-masked gathers (padding tokens, fresh spans)
+        multiply the gathered row by zero.  The slot axis is the row axis:
+        position 1 under the stacked superblocks' extra leading layer axis,
+        position 0 in tail layers."""
+        idx = jnp.asarray(sorted(set(slots)) + [self.pcfg.max_batch],
+                          jnp.int32)
+
+        def g(path, x):
+            if getattr(path[-1], "key", None) not in ("h", "conv"):
+                return x
+            if getattr(path[0], "key", None) == "blocks":
+                return x.at[:, idx].set(1e6)
+            return x.at[idx].set(1e6)
+
+        self.caches = tree_map_with_path(g, self.caches)
+
+    def _drain_state_releases(self):
+        """Drain slots whose recurrent-state rows just died (finish or
+        preemption) and poison them under the test hook.  Correctness never
+        needs host-side zeroing — a re-admitted slot's first prefill span
+        starts at position 0, which injects a fresh zero state on device —
+        so this only arms the stale-read tripwire.  Called before every
+        admission pass, i.e. before any re-admitted slot could prefill."""
+        released = self.scheduler.tables.state.drain_released()
+        if released and self.poison_reclaimed and self.has_state:
+            self._poison_state(released)
 
     # -- the serving loop ---------------------------------------------------
     def run(self, requests: Optional[List[Tuple[np.ndarray, int]]] = None
@@ -483,12 +562,14 @@ class ServingEngine:
                 freed = sched.reclaim(self.window)
                 if freed and self.poison_reclaimed:
                     self._poison_pages(freed)
+            self._drain_state_releases()
             n_pre = sched.preemptions
             if sched.active:
                 # running rows claim write pages first — the whole verify
                 # span at once under speculation (lookahead = k + 1)
                 sched.ensure_growth(self._lookahead)
                 self._apply_cow()
+            self._drain_state_releases()   # growth-pass preemptions
             admitted = sched.admit()
             if admitted:
                 # newly admitted rows may need a copy-on-write before their
@@ -547,6 +628,7 @@ class ServingEngine:
             "pages_shared": float(tables.pages_shared),
             "pages_allocated": float(tables.allocator.total_allocs),
             "cow_copies": float(tables.cow_copies),
+            "state_releases": float(tables.state.releases),
             "drafted_tokens": float(self.drafted_tokens),
             "accepted_tokens": float(self.accepted_tokens),
             "acceptance_rate": (self.accepted_tokens /

@@ -52,6 +52,8 @@ from typing import Callable, Dict, FrozenSet, List, Optional, Tuple
 
 import numpy as np
 
+from repro.serving.state_cache import StateCache
+
 TRASH_PAGE = 0  # page 0 absorbs padding writes and backs unassigned entries
 
 
@@ -321,6 +323,12 @@ class BlockTables:
     divergent write to a shared page.  The device-side page copies a COW
     produces are queued in ``drain_copies`` order for the engine to apply
     before the next prefill/decode step.
+
+    A :class:`~repro.serving.state_cache.StateCache` rides along as
+    ``self.state``: hybrid SSM/recurrent archs keep O(1) per-slot state
+    rows next to the page pool, and the same admit/release calls that bind
+    a slot's pages bind its state row — preemption and eviction free both
+    atomically (attention-only archs just never read the rows).
     """
 
     def __init__(self, cfg: PagedCacheConfig, share_prefix: bool = False):
@@ -333,6 +341,7 @@ class BlockTables:
         self.tables = np.full((cfg.max_batch, cfg.max_pages_per_seq),
                               TRASH_PAGE, np.int32)
         self.kv_len = np.zeros((cfg.max_batch,), np.int32)
+        self.state = StateCache(cfg.max_batch)  # per-slot recurrent state
         self._owned: Dict[int, Dict[int, int]] = {}  # slot → {block → page}
         self._digests: Dict[int, Tuple[List[bytes], int]] = {}
         # slot → (block digest chain of its prompt, prompt length): consumed
@@ -425,6 +434,7 @@ class BlockTables:
         owned = dict(shared)
         owned.update(zip(need, pages))
         self._owned[slot] = owned
+        self.state.admit(slot)   # bind the slot's recurrent-state row too
         self.tables[slot] = TRASH_PAGE
         for blk, page in owned.items():
             self.tables[slot, blk] = page
@@ -578,6 +588,7 @@ class BlockTables:
         are dropped (their destination pages just went away).  Returns the
         page ids that actually went back to the free list."""
         pages = list(self._owned.pop(slot).values())
+        self.state.release(slot)   # the slot's recurrent-state row dies too
         self.tables[slot] = TRASH_PAGE
         self.kv_len[slot] = 0
         self._digests.pop(slot, None)

@@ -1,0 +1,270 @@
+"""Cross-config serving conformance matrix: every config in
+``src/repro/configs`` is served through the paged engine and checked
+token-identical against the contiguous single-sequence oracle.
+
+The zoo pins the serving contract per architecture *family*:
+
+  attention   (llava_next_34b, granite_3_2b, qwen3_14b, deepseek_67b,
+               deepseek_coder_33b)      — paged KV pages only
+  attention+moe (dbrx_132b, deepseek_moe_16b) — stateless expert routing
+               rides the existing paged path unchanged
+  hybrid rec  (recurrentgemma_2b)       — rgLRU hidden + conv state rows
+               in the paged StateCache
+  ssm         (falcon_mamba_7b)         — mamba h/conv state rows
+  encoder     (hubert_xlarge)           — no decode step: the engine
+               must refuse it at construction
+
+Scenarios: eager, lazy + forced preemption (tiny pool, reclaimed state
+rows poisoned), chunked prefill (exercises the recurrent continuation /
+conv-tail carry), prefix sharing where applicable (attention-only — the
+recurrent archs must refuse), speculative decoding gating, and
+num_splits > 1 decode.  Heavy configs run the eager check under the
+slow marker; the fast tier keeps one representative per family.
+
+Numerics: token identity via argmax, the repo standard — associative-
+scan-vs-step and padded-width grouping differ only in ulps.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.serving import PagedCacheConfig, ServingEngine
+
+# every causal config, grouped by cost: the fast tier keeps one
+# representative per architecture family, the rest run under -m slow
+FAST_ARCHS = ["granite_3_2b", "deepseek_moe_16b", "recurrentgemma_2b",
+              "falcon_mamba_7b"]
+SLOW_ARCHS = ["llava_next_34b", "qwen3_14b", "deepseek_67b",
+              "deepseek_coder_33b", "dbrx_132b"]
+CAUSAL_ARCHS = FAST_ARCHS + SLOW_ARCHS
+ENCODER_ARCHS = ["hubert_xlarge"]
+RECURRENT_ARCHS = ["recurrentgemma_2b", "falcon_mamba_7b"]
+
+_zoo_param = pytest.mark.parametrize(
+    "arch", FAST_ARCHS + [pytest.param(a, marks=pytest.mark.slow)
+                          for a in SLOW_ARCHS])
+
+
+def test_zoo_is_exhaustive():
+    """The matrix covers every config — a new config must pick a tier."""
+    assert sorted(CAUSAL_ARCHS + ENCODER_ARCHS) == sorted(configs.ARCHS)
+    for a in CAUSAL_ARCHS:
+        assert configs.smoke_config(a).causal
+    for a in ENCODER_ARCHS:
+        assert not configs.smoke_config(a).has_decode
+
+
+def _zoo_cfg(arch):
+    cfg = configs.smoke_config(arch)
+    kw = dict(dtype=jnp.float32, remat=False)
+    if cfg.moe is not None:
+        # expert capacity is batch-composition dependent: packed serving
+        # and the b=1 oracle would drop different tokens at the default
+        # factor, so give the smoke MoE room to route everything
+        kw["moe"] = dataclasses.replace(cfg.moe, capacity_factor=8.0)
+    return dataclasses.replace(cfg, **kw)
+
+
+def _params(cfg):
+    from repro.models import lm
+    params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return params
+
+
+def _reqs(cfg, lens=((12, 6), (7, 8), (9, 4))):
+    rs = np.random.RandomState(0)
+    return [(rs.randint(0, cfg.vocab_size, size=L).astype(np.int32), g)
+            for L, g in lens]
+
+
+def _contiguous_gen(cfg, params, prompt, max_new, max_len=32):
+    """Single-sequence contiguous-cache greedy decode — the oracle."""
+    from repro.runtime.steps import make_serve_steps
+    arts = make_serve_steps(cfg, impl="xla", max_len=max_len, batch=1,
+                            xla_chunk=16)
+    caches = arts.cache_init_fn()
+    logits, caches = arts.prefill_fn(params, jnp.asarray(prompt)[None],
+                                     None, caches)
+    tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)
+    out = [int(tok[0])]
+    for i in range(max_new - 1):
+        logits, caches = arts.decode_fn(params, tok, caches,
+                                        jnp.int32(len(prompt) + i))
+        tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)
+        out.append(int(tok[0]))
+    return np.asarray(out, np.int32)
+
+
+def _oracle(cfg, params, reqs):
+    return {i: _contiguous_gen(cfg, params, p, g)
+            for i, (p, g) in enumerate(reqs)}
+
+
+def _check(out, expected, label):
+    for rid, exp in expected.items():
+        assert np.array_equal(out[rid], exp), \
+            f"{label} request {rid}: engine {out[rid]} != oracle {exp}"
+
+
+# ---------------------------------------------------------------------------
+# eager: every causal config
+# ---------------------------------------------------------------------------
+
+@_zoo_param
+def test_engine_matches_oracle_eager(arch):
+    cfg = _zoo_cfg(arch)
+    params = _params(cfg)
+    reqs = _reqs(cfg)
+    expected = _oracle(cfg, params, reqs)
+    # pool fits ~2 of 3 requests → real admission waves for every family
+    pcfg = PagedCacheConfig(page_size=8, num_pages=9, max_batch=2,
+                            max_pages_per_seq=3)
+    eng = ServingEngine(cfg, pcfg, params, impl="xla", prefill_len=24,
+                        xla_chunk=16)
+    out, stats = eng.run(reqs)
+    _check(out, expected, f"{arch} eager")
+    tables = eng.scheduler.tables
+    assert tables.allocator.num_free == pcfg.num_pages - 1
+    # recurrent-state slot conservation after the queue drains
+    assert tables.state.num_occupied == 0
+    assert tables.state.num_free == pcfg.max_batch
+    if arch in RECURRENT_ARCHS:
+        assert stats["state_releases"] == len(reqs)
+
+
+# ---------------------------------------------------------------------------
+# lazy + forced preemption: one config per family
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen3_14b", "deepseek_moe_16b",
+                                  "recurrentgemma_2b", "falcon_mamba_7b"])
+def test_engine_matches_oracle_lazy_preempting(arch):
+    """Pool tight enough that growth runs dry → a row is preempted, its
+    pages AND its recurrent-state row are reclaimed (poisoned with 1e6),
+    and the resumed sequence must still be token-identical — the snapshot/
+    restore of recurrent state across preemption is exact."""
+    cfg = _zoo_cfg(arch)
+    params = _params(cfg)
+    reqs = _reqs(cfg)
+    expected = _oracle(cfg, params, reqs)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=8, max_batch=2,
+                            max_pages_per_seq=8)
+    eng = ServingEngine(cfg, pcfg, params, impl="xla", prefill_len=32,
+                        xla_chunk=16, lazy=True, poison_reclaimed=True)
+    out, stats = eng.run(reqs)
+    assert stats["preemptions"] >= 1             # the pressure actually bit
+    _check(out, expected, f"{arch} lazy")
+    if arch in RECURRENT_ARCHS:
+        # every preemption released (and re-admitted) a state row on top
+        # of the per-request release
+        assert stats["state_releases"] == len(reqs) + stats["preemptions"]
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: the recurrent continuation path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["recurrentgemma_2b", "falcon_mamba_7b"])
+def test_engine_matches_oracle_chunked_prefill(arch):
+    """prefill_chunk < prompt length forces mid-prompt continuation spans:
+    the conv tail and hidden state carried through StateCache rows between
+    chunks must reproduce the one-shot prefill exactly."""
+    cfg = _zoo_cfg(arch)
+    params = _params(cfg)
+    reqs = _reqs(cfg)
+    expected = _oracle(cfg, params, reqs)
+    pcfg = PagedCacheConfig(page_size=8, num_pages=9, max_batch=2,
+                            max_pages_per_seq=3)
+    eng = ServingEngine(cfg, pcfg, params, impl="xla", prefill_len=24,
+                        xla_chunk=16, prefill_chunk=4)
+    out, _ = eng.run(reqs)
+    _check(out, expected, f"{arch} chunked")
+
+
+# ---------------------------------------------------------------------------
+# num_splits > 1 decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["granite_3_2b", "recurrentgemma_2b"])
+def test_engine_matches_oracle_num_splits(arch):
+    """Split-KV decode partitions the attention layers' KV walk; recurrent
+    layers are untouched by it and must keep decoding correctly beside it."""
+    cfg = _zoo_cfg(arch)
+    params = _params(cfg)
+    reqs = _reqs(cfg, lens=((12, 6), (7, 5)))
+    expected = _oracle(cfg, params, reqs)
+    pcfg = PagedCacheConfig(page_size=8, num_pages=9, max_batch=2,
+                            max_pages_per_seq=3)
+    eng = ServingEngine(cfg, pcfg, params, impl="xla", prefill_len=24,
+                        xla_chunk=16, num_splits=2)
+    out, _ = eng.run(reqs)
+    _check(out, expected, f"{arch} num_splits=2")
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing: attention-only, refused elsewhere
+# ---------------------------------------------------------------------------
+
+def test_prefix_sharing_matches_oracle_attention():
+    cfg = _zoo_cfg("granite_3_2b")
+    params = _params(cfg)
+    rs = np.random.RandomState(1)
+    system = rs.randint(0, cfg.vocab_size, size=8).astype(np.int32)
+    # three requests over two admission waves: wave 1 prefills the shared
+    # 2-page system prompt cold, wave 2's request hits the registered prefix
+    tails = [rs.randint(0, cfg.vocab_size, size=L).astype(np.int32)
+             for L in (4, 3, 4)]
+    reqs = [(np.concatenate([system, t]), 5) for t in tails]
+    expected = _oracle(cfg, params, reqs)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=17, max_batch=2,
+                            max_pages_per_seq=6)
+    eng = ServingEngine(cfg, pcfg, params, impl="xla", prefill_len=24,
+                        xla_chunk=16, share_prefix=True)
+    out, stats = eng.run(reqs)
+    _check(out, expected, "granite_3_2b share_prefix")
+    assert stats["prefill_tokens_skipped"] > 0   # the cache actually hit
+
+
+@pytest.mark.parametrize("arch", ["recurrentgemma_2b", "falcon_mamba_7b"])
+def test_prefix_sharing_refused_for_recurrent(arch):
+    """The prefix index certifies cached KV *pages*; recurrent state is
+    cumulative and unaddressable by content hash — the engine must refuse
+    rather than silently serve wrong tokens."""
+    cfg = _zoo_cfg(arch)
+    params = _params(cfg)
+    pcfg = PagedCacheConfig(page_size=8, num_pages=9, max_batch=2,
+                            max_pages_per_seq=3)
+    with pytest.raises(ValueError, match="attention-only"):
+        ServingEngine(cfg, pcfg, params, impl="xla", prefill_len=24,
+                      share_prefix=True)
+
+
+@pytest.mark.parametrize("arch", ["recurrentgemma_2b", "falcon_mamba_7b"])
+def test_speculation_refused_for_recurrent(arch):
+    """Rejected draft tokens would need recurrent-state rollback, which a
+    cumulative scan state cannot do — refuse at construction."""
+    cfg = _zoo_cfg(arch)
+    params = _params(cfg)
+    pcfg = PagedCacheConfig(page_size=8, num_pages=9, max_batch=2,
+                            max_pages_per_seq=3)
+    with pytest.raises(ValueError, match="attention-only"):
+        ServingEngine(cfg, pcfg, params, impl="xla", prefill_len=24,
+                      speculate_k=4)
+
+
+# ---------------------------------------------------------------------------
+# encoder-only: the engine must refuse
+# ---------------------------------------------------------------------------
+
+def test_encoder_only_refused():
+    cfg = _zoo_cfg("hubert_xlarge")
+    params = _params(cfg)
+    pcfg = PagedCacheConfig(page_size=8, num_pages=9, max_batch=2,
+                            max_pages_per_seq=3)
+    with pytest.raises(AssertionError, match="autoregressive"):
+        ServingEngine(cfg, pcfg, params, impl="xla", prefill_len=24)

@@ -168,3 +168,48 @@ def test_vocab_padding(rng_key):
     batch = _batch(rng_key, cfg)
     loss, _ = lm.loss_fn(cfg, params, batch, Ctx(impl="xla", xla_chunk=32))
     assert bool(jnp.isfinite(loss))
+
+
+# ---------------------------------------------------------------------------
+# recurrent mixers: full-sequence scan ≡ T sequential decode steps
+# ---------------------------------------------------------------------------
+# The serving packed-prefill path leans on this equivalence (a span's scan
+# must leave exactly the state a step-by-step decode would) — pin it at the
+# mixer level where a failure localizes to one recurrence, not a whole LM.
+
+def test_rglru_step_equals_scan(rng_key):
+    from repro.models import rglru
+    cfg = _f32(configs.smoke_config("recurrentgemma_2b"))
+    p, _ = rglru.init_rglru(rng_key, cfg, jnp.float32)
+    b, s = 2, 12
+    x = jax.random.normal(jax.random.fold_in(rng_key, 1), (b, s, cfg.d_model))
+    ctx = Ctx(impl="xla")
+    out_scan, cache_scan = rglru.apply_rglru(
+        p, x, ctx, cfg, cache=rglru.init_rglru_cache(cfg, b))
+    cache = rglru.init_rglru_cache(cfg, b)
+    ctx_d = dataclasses.replace(ctx, decode=True)
+    for t in range(s):
+        out_t, cache = rglru.apply_rglru(p, x[:, t:t + 1], ctx_d, cfg,
+                                         cache=cache)
+        assert max_err(out_t[:, 0], out_scan[:, t]) < 2e-5, f"step {t}"
+    assert max_err(cache["h"], cache_scan["h"]) < 2e-5
+    assert max_err(cache["conv"], cache_scan["conv"]) < 2e-5
+
+
+def test_mamba_step_equals_scan(rng_key):
+    from repro.models import mamba
+    cfg = _f32(configs.smoke_config("falcon_mamba_7b"))
+    p, _ = mamba.init_mamba(rng_key, cfg, jnp.float32)
+    b, s = 2, 12
+    x = jax.random.normal(jax.random.fold_in(rng_key, 1), (b, s, cfg.d_model))
+    ctx = Ctx(impl="xla")
+    out_scan, cache_scan = mamba.apply_mamba(
+        p, x, ctx, cfg, cache=mamba.init_mamba_cache(cfg, b))
+    cache = mamba.init_mamba_cache(cfg, b)
+    ctx_d = dataclasses.replace(ctx, decode=True)
+    for t in range(s):
+        out_t, cache = mamba.apply_mamba(p, x[:, t:t + 1], ctx_d, cfg,
+                                         cache=cache)
+        assert max_err(out_t[:, 0], out_scan[:, t]) < 2e-5, f"step {t}"
+    assert max_err(cache["h"], cache_scan["h"]) < 2e-5
+    assert max_err(cache["conv"], cache_scan["conv"]) < 2e-5

@@ -21,7 +21,11 @@ The load-bearing contracts:
   utilization;
 * sliding-window page reclamation frees only fully-out-of-window pages —
   poisoning every freed page (and the trash page) leaves generations
-  bit-identical, so the kernels' window gate provably never reads them.
+  bit-identical, so the kernels' window gate provably never reads them;
+* recurrent-state slot lifecycle (StateCache) tracks page admission exactly:
+  a slot's state row is bound on admit, released (and queued for poisoning)
+  on release/preemption, and conserved under randomized churn —
+  free + occupied == capacity at every step.
 """
 
 import dataclasses
@@ -41,7 +45,7 @@ from repro.core.attention import spark_paged_decode, spark_paged_decode_partials
 from repro.kernels.ops import (decode, gather_pages, paged_decode,
                                paged_decode_reference)
 from repro.serving import (BlockTables, PageAllocator, PagedCacheConfig,
-                           Request, Scheduler, TRASH_PAGE)
+                           Request, Scheduler, StateCache, TRASH_PAGE)
 
 
 def _mk_pool(key, b, hq, hkv, d, page_size, pages_per_row, extra_pages=3):
@@ -464,6 +468,7 @@ def test_packed_prefill_matches_per_prompt_prefill():
             tokens = np.zeros((1, S), np.int32)
             seg = np.full((1, S), -1, np.int32)
             pos = np.zeros((1, S), np.int32)
+            slots = np.full((1, S), -1, np.int32)
             off = 0
             for i, (prompt, slot) in enumerate(group):
                 if slot not in tables._owned:
@@ -472,11 +477,13 @@ def test_packed_prefill_matches_per_prompt_prefill():
                 tokens[0, off:off + n] = prompt
                 seg[0, off:off + n] = i
                 pos[0, off:off + n] = np.arange(n)
+                slots[0, off:off + n] = slot
                 off += n
             dest = tables.prefill_dest(seg[0], [s for _, s in group])
             logits, caches = arts.prefill_fn(
                 params, jnp.asarray(tokens), jnp.asarray(seg),
-                jnp.asarray(pos), jnp.asarray(dest[None]), caches)
+                jnp.asarray(pos), jnp.asarray(dest[None]),
+                jnp.asarray(slots), caches)
             off = 0
             for i, (prompt, slot) in enumerate(group):
                 off += len(prompt)
@@ -675,3 +682,114 @@ print("PASS")
                          env=env, capture_output=True, text=True, timeout=480)
     assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
     assert "PASS" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# recurrent-state slot cache (StateCache)
+# ---------------------------------------------------------------------------
+
+def test_state_cache_tracks_preemption_lifecycle():
+    """Mirror of test_scheduler_lazy_preempts_youngest_and_resumes at the
+    state layer: admission binds a slot's recurrent-state row, preemption
+    releases it (queued for poisoning), and the resumed request re-admits
+    a freshly-poisoned row — occupancy tracks the scheduler exactly."""
+    cfg = PagedCacheConfig(page_size=4, num_pages=6, max_batch=2,
+                           max_pages_per_seq=4)
+    sched = Scheduler(cfg, lazy=True)
+    state = sched.tables.state
+    assert state.num_free == 2 and state.num_occupied == 0
+    sched.submit(Request(rid=0, tokens=np.arange(8, dtype=np.int32),
+                         max_new_tokens=8))
+    sched.submit(Request(rid=1, tokens=np.arange(4, dtype=np.int32),
+                         max_new_tokens=8))
+    s0, s1 = sched.admit()
+    assert state.num_occupied == 2 and state.num_free == 0
+    assert state.occupied(s0.slot) and state.occupied(s1.slot)
+    assert state.drain_released() == []          # nothing released yet
+    s0.generated, s1.generated = [11], [21]
+    sched.tables.kv_len[s0.slot], sched.tables.kv_len[s1.slot] = 8, 4
+    sched.ensure_growth()
+    s0.generated += [12, 13, 14, 15]
+    s1.generated += [22, 23, 24]
+    sched.tables.kv_len[s0.slot], sched.tables.kv_len[s1.slot] = 12, 8
+    preempted_slot = s1.slot
+    assert sched.ensure_growth() == [1]          # youngest (rid 1) preempted
+    # the preempted row's state died with its pages
+    assert not state.occupied(preempted_slot)
+    assert state.num_occupied == 1 and state.num_free == 1
+    assert state.drain_released() == [preempted_slot]
+    assert state.drain_released() == []          # drain-once semantics
+    # survivor finishes → its row is released too; the resumed request then
+    # re-admits into a clean row
+    s0.generated += [16, 17, 18]
+    sched.evict_finished()
+    assert state.num_occupied == 0
+    assert state.drain_released() == [s0.slot]
+    (s1b,) = sched.admit()
+    assert state.occupied(s1b.slot) and state.num_occupied == 1
+    assert state.admits == 3 and state.releases == 2
+
+
+def test_state_cache_guards():
+    c = StateCache(2)
+    c.admit(0)
+    with pytest.raises(ValueError):
+        c.admit(0)                               # double admit
+    with pytest.raises(ValueError):
+        c.admit(2)                               # out of range
+    with pytest.raises(ValueError):
+        c.release(1)                             # never admitted
+    c.release(0)
+    with pytest.raises(ValueError):
+        c.release(0)                             # double release
+
+
+def test_state_cache_randomized_conservation():
+    """Random admit/release churn via the scheduler keeps state slots
+    conserved (free + occupied == capacity, the sets disjoint) and in
+    lock-step with page-table slot ownership; every released slot shows
+    up in the poison queue exactly once."""
+    cfg = PagedCacheConfig(page_size=4, num_pages=12, max_batch=3,
+                           max_pages_per_seq=5)
+    rs = np.random.RandomState(7)
+    sched = Scheduler(cfg, lazy=True)
+    state = sched.tables.state
+    next_rid = 0
+    drained = []
+
+    def check():
+        assert state.num_free + state.num_occupied == cfg.max_batch
+        occ = {s for s in range(cfg.max_batch) if state.occupied(s)}
+        assert len(occ) == state.num_occupied
+        assert occ == set(sched.tables._owned)   # lock-step with the pages
+
+    for step in range(300):
+        op = rs.randint(5)
+        if op == 0 and len(sched.waiting) < 4:
+            sched.submit(Request(
+                rid=next_rid,
+                tokens=rs.randint(0, 5, size=int(rs.randint(2, 10))
+                                  ).astype(np.int32),
+                max_new_tokens=int(rs.randint(1, 6))))
+            next_rid += 1
+        elif op == 1:
+            for seq in sched.admit():
+                seq.prefilled = seq.request.prompt_len
+                sched.tables.kv_len[seq.slot] = seq.request.prompt_len
+                seq.generated.append(int(rs.randint(5)))
+        elif op == 2 and sched.active:
+            sched.ensure_growth()
+            for seq in list(sched.active.values()):
+                if not seq.done and sched.tables.append_dest_ok(seq.slot):
+                    sched.tables.kv_len[seq.slot] += 1
+                    seq.generated.append(int(rs.randint(5)))
+        elif op == 3:
+            sched.evict_finished()
+        elif op == 4:
+            drained.extend(state.drain_released())
+        check()
+    sched.evict_finished()
+    drained.extend(state.drain_released())
+    # every release was queued for poisoning exactly once
+    assert len(drained) == state.releases
+    assert state.admits - state.releases == state.num_occupied

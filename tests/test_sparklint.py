@@ -243,6 +243,13 @@ def test_host_rule_clean_and_engine_exempt(tmp_path):
     assert rule_ids(tmp_path, files, rules=["host-layer-numpy-only"]) == []
 
 
+def test_host_rule_covers_state_cache(tmp_path):
+    """The recurrent-state slot cache is host bookkeeping too."""
+    ids = rule_ids(tmp_path, {"src/repro/serving/state_cache.py": HOST_BAD},
+                   rules=["host-layer-numpy-only"])
+    assert ids == ["host-layer-numpy-only"]
+
+
 # ---------------------------------------------------------------- rule 6
 
 DONATE_BAD = """
@@ -368,6 +375,47 @@ def test_ops_coverage_clean_when_referenced(tmp_path):
              "tests/test_ops.py": TEST_FIXTURE
              + "\n    def test_more():\n        ops.uncovered(1, 2, 3)\n"}
     assert rule_ids(tmp_path, files, rules=["ops-test-coverage"]) == []
+
+
+# ---------------------------------------------------------------- rule 9
+
+ARCHS_FIXTURE = """
+    ARCHS = [
+        "alpha_1b", "beta_2b",
+    ]
+"""
+
+ZOO_FIXTURE = """
+    import pytest
+
+    @pytest.mark.parametrize("arch", ["alpha_1b"])
+    def test_engine_matches_oracle(arch):
+        assert arch
+"""
+
+
+def test_zoo_coverage_flags_unserved_config(tmp_path):
+    fs = run(make_tree(tmp_path,
+                       {"src/repro/configs/__init__.py": ARCHS_FIXTURE,
+                        "tests/test_config_zoo.py": ZOO_FIXTURE}),
+             rules=["config-zoo-coverage"])
+    assert [f.rule for f in fs] == ["config-zoo-coverage"]
+    assert "beta_2b" in fs[0].message
+
+
+def test_zoo_coverage_flags_missing_matrix(tmp_path):
+    fs = run(make_tree(tmp_path,
+                       {"src/repro/configs/__init__.py": ARCHS_FIXTURE}),
+             rules=["config-zoo-coverage"])
+    assert [f.rule for f in fs] == ["config-zoo-coverage"]
+    assert "missing" in fs[0].message
+
+
+def test_zoo_coverage_clean_when_every_config_named(tmp_path):
+    files = {"src/repro/configs/__init__.py": ARCHS_FIXTURE,
+             "tests/test_config_zoo.py": ZOO_FIXTURE.replace(
+                 '["alpha_1b"]', '["alpha_1b", "beta_2b"]')}
+    assert rule_ids(tmp_path, files, rules=["config-zoo-coverage"]) == []
 
 
 # ------------------------------------------------------- suppressions

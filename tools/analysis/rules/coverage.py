@@ -1,10 +1,16 @@
-"""Oracle-coverage contract: every public op entrypoint is exercised by tests.
+"""Coverage contracts: surfaces the test suite must track by construction.
 
+``ops-test-coverage``: every public op entrypoint is exercised by tests.
 ``kernels/ops.py`` is the public surface the oracle tests pin — an
 entrypoint no test references is an entrypoint whose kernel/fallback/oracle
 agreement can silently rot (exactly how the seed's decode variants diverged
 before the PR 5 unification). The rule cross-references every public
 top-level def/class in ops.py against the identifier sets of ``tests/``.
+
+``config-zoo-coverage``: every config name in ``configs.ARCHS`` appears in
+the serving conformance matrix ``tests/test_config_zoo.py``. Adding a
+config without slotting it into the zoo is how an architecture ships with
+serving silently unverified — the matrix only certifies what it names.
 """
 
 from __future__ import annotations
@@ -54,3 +60,54 @@ def ops_test_coverage(cache, sf) -> List[Finding]:
                 f"public {kind} '{node.name}' is not referenced by any "
                 f"test file — add an oracle test or make it private"))
     return out
+
+
+CONFIGS_PATH = "src/repro/configs/__init__.py"
+ZOO_TEST = "tests/test_config_zoo.py"
+
+
+def _zoo_strings(cache):
+    """All string constants in the zoo test file (None if it is absent)."""
+    for sf in cache.iter_python("tests"):
+        if sf.rel == ZOO_TEST and sf.tree is not None:
+            return {node.value for node in ast.walk(sf.tree)
+                    if isinstance(node, ast.Constant)
+                    and isinstance(node.value, str)}
+    return None
+
+
+@rule("config-zoo-coverage",
+      description="every config name in configs.ARCHS appears in the "
+                  "serving conformance matrix tests/test_config_zoo.py",
+      paths=(CONFIGS_PATH,))
+def config_zoo_coverage(cache, sf) -> List[Finding]:
+    """Flag ARCHS entries absent from the zoo matrix (string-constant scan:
+    the zoo names archs literally in parametrize lists, so a plain constant
+    search is exact — no need to evaluate the test module)."""
+    archs = []
+    lines = {}
+    for node in sf.tree.body:
+        if not isinstance(node, ast.Assign):
+            continue
+        if not any(isinstance(t, ast.Name) and t.id == "ARCHS"
+                   for t in node.targets):
+            continue
+        if isinstance(node.value, (ast.List, ast.Tuple)):
+            for elt in node.value.elts:
+                if isinstance(elt, ast.Constant) and isinstance(elt.value,
+                                                                str):
+                    archs.append(elt.value)
+                    lines[elt.value] = elt.lineno
+    if not archs:
+        return []
+    zoo = _zoo_strings(cache)
+    if zoo is None:
+        return [Finding(
+            "config-zoo-coverage", sf.rel, lines[archs[0]],
+            f"{ZOO_TEST} is missing — the serving conformance matrix must "
+            f"cover every config in ARCHS")]
+    return [Finding(
+        "config-zoo-coverage", sf.rel, lines[name],
+        f"config '{name}' is not named in {ZOO_TEST} — add it to the "
+        f"serving conformance matrix (or to its encoder/slow tier)")
+        for name in archs if name not in zoo]

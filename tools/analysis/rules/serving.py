@@ -1,11 +1,11 @@
-"""Serving host-layer contract: scheduler/paged_cache/drafter are device-free.
+"""Serving host-layer contract: the scheduler stack is device-free.
 
 The PR 4 invariant: the scheduler state machine, the page allocator/block
-tables, and the drafter run on the host in plain numpy/python — the only
-device work per engine step is the fixed-shape jitted calls in
-``runtime/steps.py``. A stray ``jax``/``jnp`` import here is how host
-bookkeeping silently starts tracing, recompiling per queue shape, or
-holding device buffers the allocator thinks it freed.
+tables, the recurrent-state slot cache, and the drafter run on the host in
+plain numpy/python — the only device work per engine step is the
+fixed-shape jitted calls in ``runtime/steps.py``. A stray ``jax``/``jnp``
+import here is how host bookkeeping silently starts tracing, recompiling
+per queue shape, or holding device buffers the allocator thinks it freed.
 """
 
 from __future__ import annotations
@@ -18,6 +18,7 @@ from tools.analysis.core import Finding, rule
 #: the host-only modules (engine.py is the device boundary and is exempt)
 HOST_ONLY = ("src/repro/serving/scheduler.py",
              "src/repro/serving/paged_cache.py",
+             "src/repro/serving/state_cache.py",
              "src/repro/serving/drafter.py")
 
 BANNED_ROOTS = {"jax", "jaxlib"}
