@@ -1,0 +1,207 @@
+"""Chaos harness for the serving engine: faults vs. invariants → BENCH_chaos.json.
+
+Resilience claims are only as good as the harness that attacks them.  This
+benchmark replays one ragged request trace through the engine under seeded
+:class:`~repro.serving.faults.FaultPlan`s — pool exhaustion, preemption
+storms, freed-page/state poisoning, NaN logits, mid-flight cancellations,
+and a crash-at-step-N with snapshot/restore — and asserts the resilience
+contract on every run:
+
+* **typed termination** — every submitted rid ends in exactly one outcome
+  (``COMPLETED | CANCELLED | TIMEOUT | SHED | FAILED``); no hangs (the run
+  returning at all is the no-livelock check — the watchdog converts any
+  wedged state into a ``FAILED`` outcome).
+* **conservation** — after the pool drains, ``free + cached == usable``
+  with nothing allocated, and every recurrent-state row is free.
+* **isolation** — rows a fault did not touch produce tokens BIT-IDENTICAL
+  to the fault-free baseline (greedy decode is schedule-invariant per row,
+  so scheduling faults must not leak across rows).
+* **replay** — the same FaultPlan seed reproduces the same outcomes and
+  the same tokens, byte for byte.
+* **recovery** — crash-at-step-N + snapshot/restore on a fresh engine
+  resumes token-identically to the baseline.
+
+The container is CPU-only; every asserted column here is timing-independent.
+
+    PYTHONPATH=src python benchmarks/serving_chaos.py            # full sweep
+    PYTHONPATH=src python benchmarks/serving_chaos.py --smoke    # CI guard
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from common import row
+
+
+def make_trace(rs, vocab, n_requests, prompt_len, gen):
+    """Ragged random requests (no motifs needed — no drafter here)."""
+    reqs = []
+    for _ in range(n_requests):
+        plen = int(rs.randint(max(2, prompt_len // 2), prompt_len + 1))
+        g = int(rs.randint(max(2, gen // 2), gen + 1))
+        reqs.append((rs.randint(0, vocab, size=plen).astype(np.int32), g))
+    return reqs
+
+
+def build_engine(cfg, pcfg, params, prefill_len, plan=None):
+    from repro.serving import ServingEngine
+    return ServingEngine(cfg, pcfg, params, impl="xla", xla_chunk=16,
+                         prefill_len=prefill_len, lazy=True,
+                         fault_plan=plan)
+
+
+def check_drained(eng):
+    """Pool/state conservation after the queue drains — no fault may leak
+    a page or a state row."""
+    alloc = eng.scheduler.tables.allocator
+    assert alloc.num_allocated == 0, \
+        f"{alloc.num_allocated} pages still allocated after drain"
+    assert alloc.num_free + alloc.num_cached == eng.pcfg.usable_pages, \
+        "page conservation violated"
+    st = eng.scheduler.tables.state
+    assert st.num_occupied == 0 and st.num_free == st.capacity, \
+        "state-row conservation violated"
+
+
+def outcome_map(eng):
+    return {rid: res.outcome.value for rid, res in eng.results.items()}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seeds", default="1,2,3,4",
+                    help="FaultPlan seeds to sweep (comma-separated)")
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--page-size", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_chaos.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI guard: two plans + the crash/restore "
+                         "scenario, all invariants asserted")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.seeds, args.requests = "1,2", 6
+        args.prompt_len, args.gen = 12, 8
+
+    from repro import configs
+    from repro.models import lm
+    from repro.serving import (FaultPlan, InjectedCrash, Outcome,
+                               PagedCacheConfig, untyped_rids)
+
+    cfg = dataclasses.replace(configs.smoke_config("qwen3_14b"),
+                              dtype=jnp.float32, remat=False)
+    params, _ = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
+    rs = np.random.RandomState(args.seed)
+    reqs = make_trace(rs, cfg.vocab_size, args.requests, args.prompt_len,
+                      args.gen)
+    budget = args.prompt_len + args.gen
+    pages = -(-budget // args.page_size) + 1
+    pcfg = PagedCacheConfig(
+        page_size=args.page_size, max_batch=4, max_pages_per_seq=pages,
+        num_pages=1 + 3 * pages)   # tight: faults bite, requests still fit
+
+    # fault-free baseline: the isolation reference
+    eng0 = build_engine(cfg, pcfg, params, budget)
+    out0, st0 = eng0.run(list(reqs))
+    check_drained(eng0)
+    assert len(out0) == len(reqs), "baseline must complete every request"
+    results = [{"mode": "baseline", "outcomes": st0["outcomes"],
+                "decode_steps": st0["decode_steps"],
+                "generated_tokens": st0["generated_tokens"],
+                "wall_s": st0["wall_s"]}]
+    row("serving_chaos/baseline", st0["wall_s"] * 1e6,
+        f"steps={st0['decode_steps']:.0f};"
+        f"tokens={st0['generated_tokens']:.0f}")
+
+    for seed in [int(s) for s in args.seeds.split(",")]:
+        runs = []
+        for rep in range(2):            # replay determinism: run each twice
+            plan = FaultPlan(seed=seed, horizon=32)
+            eng = build_engine(cfg, pcfg, params, budget, plan=plan)
+            out, st = eng.run(list(reqs))
+            check_drained(eng)
+            assert untyped_rids(range(len(reqs)), eng.results) == [], \
+                f"seed {seed}: requests terminated without a typed outcome"
+            for rid, toks in out.items():   # isolation vs. fault-free run
+                assert np.array_equal(toks, out0[rid]), \
+                    f"seed {seed}: completed rid {rid} diverged from baseline"
+            runs.append((outcome_map(eng), out, st))
+        assert runs[0][0] == runs[1][0], \
+            f"seed {seed}: outcomes differ across replays"
+        assert set(runs[0][1]) == set(runs[1][1]) and all(
+            np.array_equal(runs[0][1][r], runs[1][1][r])
+            for r in runs[0][1]), f"seed {seed}: tokens differ across replays"
+        omap, out, st = runs[0]
+        results.append({"mode": f"chaos_seed{seed}",
+                        "outcomes": st["outcomes"],
+                        "decode_steps": st["decode_steps"],
+                        "generated_tokens": st["generated_tokens"],
+                        "watchdog_fires": st["watchdog_fires"],
+                        "preemptions": st["preemptions"],
+                        "wall_s": st["wall_s"]})
+        row(f"serving_chaos/seed{seed}", st["wall_s"] * 1e6,
+            ";".join(f"{k}={v}" for k, v in st["outcomes"].items() if v))
+
+    # crash-at-step-N + snapshot/restore: token-identical recovery
+    crash_at = 3
+    plan = FaultPlan(seed=0, events=(), crash_step=crash_at)
+    eng = build_engine(cfg, pcfg, params, budget, plan=plan)
+    try:
+        eng.run(list(reqs))
+        raise AssertionError("injected crash did not fire")
+    except InjectedCrash:
+        snap = eng.snapshot()
+    eng2 = build_engine(cfg, pcfg, params, budget)
+    eng2.restore(snap)
+    out2, st2 = eng2.run()
+    check_drained(eng2)
+    assert set(out2) == set(out0), "restore lost or invented requests"
+    for rid in out0:
+        assert np.array_equal(out2[rid], out0[rid]), \
+            f"crash/restore diverged from baseline on rid {rid}"
+    results.append({"mode": f"crash_restore@{crash_at}",
+                    "outcomes": st2["outcomes"],
+                    "decode_steps": st2["decode_steps"],
+                    "generated_tokens": st2["generated_tokens"],
+                    "wall_s": st2["wall_s"]})
+    row("serving_chaos/crash_restore", st2["wall_s"] * 1e6,
+        f"crash_at={crash_at};resumed_tokens={st2['generated_tokens']:.0f}")
+
+    if args.smoke:
+        chaos = [r for r in results if r["mode"].startswith("chaos")]
+        assert any(sum(r["outcomes"].values())
+                   - r["outcomes"][Outcome.COMPLETED.value] > 0
+                   for r in chaos), \
+            "no chaos run perturbed a single request — plans too tame for " \
+            "a CI guard"
+        print("smoke ok: typed outcomes + conservation + isolation + "
+              "replay + crash/restore identity all hold")
+
+    payload = {
+        "bench": "serving_chaos",
+        "arch": "qwen3_14b(smoke)",
+        "requests": args.requests,
+        "prompt_len": args.prompt_len,
+        "gen": args.gen,
+        "page_size": args.page_size,
+        "smoke": bool(args.smoke),
+        "results": results,
+    }
+    out_path = Path(args.out)
+    out_path.write_text(json.dumps(payload, indent=1, sort_keys=True))
+    json.loads(out_path.read_text())       # artifact must round-trip
+    print(f"wrote {out_path} ({len(results)} cells)")
+
+
+if __name__ == "__main__":
+    main()

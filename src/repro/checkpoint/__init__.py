@@ -1,3 +1,5 @@
-from repro.checkpoint.ckpt import latest_step, restore, save, save_async
+from repro.checkpoint.ckpt import (CorruptCheckpointError, latest_step,
+                                   restore, save, save_async)
 
-__all__ = ["latest_step", "restore", "save", "save_async"]
+__all__ = ["CorruptCheckpointError", "latest_step", "restore", "save",
+           "save_async"]

@@ -12,10 +12,15 @@ Design points for 1000+-node deployments:
   thread so the train loop only blocks for the device→host copy.
 * **Self-describing**: tree structure + dtypes + step live in metadata.json;
   arrays live in one .npz per process (single-process CPU container ⇒ one).
+* **Integrity**: metadata records a blake2b digest of the array payload;
+  restore verifies it *before* deserialization and raises
+  :class:`CorruptCheckpointError` on mismatch — a truncated or bit-flipped
+  checkpoint fails with a clear message instead of deep inside np.load.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -26,6 +31,20 @@ import jax
 import numpy as np
 
 _SEP = "/"
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint's array payload does not match its recorded digest —
+    truncated write, bit rot, or manual tampering.  Restore from an older
+    step (the keep ring holds several) rather than deserializing garbage."""
+
+
+def _digest_file(path: str) -> str:
+    h = hashlib.blake2b(digest_size=16)
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
 
 
 def _flatten(tree) -> dict:
@@ -70,6 +89,7 @@ def _write(ckpt_dir, step, flat, treedef, keep):
     np.savez(os.path.join(tmp, "arrays.npz"), **flat)
     meta = {"step": step, "keys": sorted(flat.keys()),
             "treedef": str(treedef),
+            "digest": _digest_file(os.path.join(tmp, "arrays.npz")),
             "shapes": {k: list(v.shape) for k, v in flat.items()},
             "dtypes": {k: str(v.dtype) for k, v in flat.items()}}
     with open(os.path.join(tmp, "metadata.json"), "w") as f:
@@ -94,6 +114,15 @@ def restore(ckpt_dir: str, step: int, like, *, shardings=None):
     structure, NamedSharding leaves) re-shards under a possibly different mesh
     — the elastic-restart path."""
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "metadata.json")) as f:
+        meta = json.load(f)
+    want = meta.get("digest")  # absent in pre-digest checkpoints: accepted
+    if want is not None:
+        got = _digest_file(os.path.join(d, "arrays.npz"))
+        if got != want:
+            raise CorruptCheckpointError(
+                f"checkpoint {d} failed integrity check: arrays.npz digest "
+                f"{got} != recorded {want} (truncated or corrupted write?)")
     with np.load(os.path.join(d, "arrays.npz")) as z:
         flat_like = _flatten(like)
         missing = set(flat_like) - set(z.files)

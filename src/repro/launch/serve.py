@@ -87,6 +87,19 @@ def main(argv=None):
                     help="split-KV decode: parallel KV partitions per "
                          "(batch, kv-head) row (0 = 1, or autotuned with "
                          "--autotune)")
+    ap.add_argument("--deadline-ms", type=float, default=0,
+                    help="--paged: per-request wall-clock deadline in "
+                         "milliseconds; expired requests terminate with a "
+                         "TIMEOUT outcome (0 = no deadline)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="--paged: bounded admission queue — submissions "
+                         "past this many waiting requests shed with a SHED "
+                         "outcome (0 = unbounded)")
+    ap.add_argument("--fault-plan", type=int, default=-1,
+                    help="--paged: seed a replayable chaos FaultPlan "
+                         "(serving/faults.py) injecting pool exhaustion, "
+                         "preemption storms, freed-page poison, NaN logits "
+                         "and cancellations (-1 = off)")
     ap.add_argument("--autotune", action="store_true",
                     help="pick --num-splits from the perf/autotune.py cost "
                          "model (persistent cache; explicit --num-splits "
@@ -151,7 +164,7 @@ def main(argv=None):
 
 def serve_paged(cfg, args, mesh=None):
     """Continuous batching over ragged synthetic requests (paged KV cache)."""
-    from repro.serving import PagedCacheConfig, ServingEngine
+    from repro.serving import FaultPlan, PagedCacheConfig, ServingEngine
 
     from repro.models import lm
     key = jax.random.PRNGKey(args.seed)
@@ -176,13 +189,21 @@ def serve_paged(cfg, args, mesh=None):
     prefill_len = max(args.prompt_len, args.page_size)
     if args.lazy:
         prefill_len = max(prefill_len, budget)
+    plan = (FaultPlan(seed=args.fault_plan)
+            if args.fault_plan >= 0 else None)
     eng = ServingEngine(cfg, pcfg, params, impl=args.impl, mesh=mesh,
                         prefill_len=prefill_len, lazy=args.lazy,
                         num_splits=args.num_splits or None,
                         autotune=args.autotune,
                         share_prefix=args.share_prefix,
                         prefill_chunk=args.prefill_chunk or None,
-                        speculate_k=args.speculate or None)
+                        speculate_k=args.speculate or None,
+                        deadline_ms=args.deadline_ms or None,
+                        max_queue=args.max_queue or None,
+                        fault_plan=plan)
+    if plan is not None:
+        print(f"fault plan (seed {plan.seed}): "
+              + " ".join(f"{e.kind}@{e.step}" for e in plan.events))
     if args.autotune or args.num_splits:
         print(f"decode num_splits: {eng.num_splits}"
               + (" (autotuned)" if args.autotune and not args.num_splits
@@ -224,7 +245,15 @@ def serve_paged(cfg, args, mesh=None):
               f"({stats['acceptance_rate']:.1%}), "
               f"{stats['generated_tokens'] / max(stats['decode_steps'], 1):.2f} "
               f"tokens/verify step")
-    print("generated (request 0):", out[0][:16])
+    counts = stats["outcomes"]
+    print("outcomes: " + " ".join(f"{k}={v}" for k, v in counts.items())
+          + (f" (watchdog_fires={stats['watchdog_fires']:.0f})"
+             if stats["watchdog_fires"] else ""))
+    if 0 in out:
+        print("generated (request 0):", out[0][:16])
+    else:  # request 0 cancelled/timed out/shed/failed under a fault plan
+        print("request 0 did not complete:",
+              eng.results[0].outcome.value, "—", eng.results[0].reason)
 
 
 if __name__ == "__main__":

@@ -30,6 +30,15 @@ idea, built on this repo's scalar-prefetch ragged-skip machinery):
                      prefix caching (``share_prefix=True``) and chunked
                      prefill (``prefill_chunk=``) ride on one extra jitted
                      step that prefills suffix spans against cached pages.
+* ``outcomes``     — the typed request-outcome taxonomy (``COMPLETED |
+                     CANCELLED | TIMEOUT | SHED | FAILED``): every request
+                     the engine accepts terminates in exactly one.
+* ``faults``       — seeded, replayable fault injection (``FaultPlan``)
+                     at the host-layer seams: pool exhaustion, preemption
+                     storms, freed-page/state poisoning, NaN logits,
+                     crash-at-step-N + snapshot/restore.  The chaos
+                     harness behind tests/test_chaos.py and
+                     benchmarks/serving_chaos.py.
 
 Kernel-level entry points live in ``core.attention.spark_paged_decode`` and
 ``kernels/decode.py::flash_paged_decode``; jitted model steps come from
@@ -41,14 +50,20 @@ See docs/serving.md for the design and a quickstart.
 
 from repro.serving.drafter import NgramDrafter, longest_accept
 from repro.serving.engine import ServingEngine
+from repro.serving.faults import FaultEvent, FaultPlan, InjectedCrash
+from repro.serving.outcomes import (Outcome, RequestResult, outcome_counts,
+                                    untyped_rids)
 from repro.serving.paged_cache import (BlockTables, PageAllocator,
                                        PagedCacheConfig, PrefixIndex,
                                        TRASH_PAGE)
-from repro.serving.scheduler import ActiveSeq, Request, Scheduler
+from repro.serving.scheduler import (AdmissionImpossible, ActiveSeq, Request,
+                                     Scheduler)
 from repro.serving.state_cache import StateCache
 
 __all__ = [
     "ServingEngine", "BlockTables", "PageAllocator", "PagedCacheConfig",
     "PrefixIndex", "TRASH_PAGE", "ActiveSeq", "Request", "Scheduler",
-    "NgramDrafter", "longest_accept", "StateCache",
+    "NgramDrafter", "longest_accept", "StateCache", "AdmissionImpossible",
+    "Outcome", "RequestResult", "outcome_counts", "untyped_rids",
+    "FaultEvent", "FaultPlan", "InjectedCrash",
 ]

@@ -86,19 +86,23 @@ lockstep for free).
 
 from __future__ import annotations
 
+import copy
 import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.tree_util import tree_map_with_path
+from jax.tree_util import tree_map, tree_map_with_path
 
 from repro.models.layers import paged_decode_window
 from repro.runtime.steps import make_serve_steps
 from repro.serving.drafter import NgramDrafter, longest_accept
+from repro.serving.faults import FaultPlan, InjectedCrash
+from repro.serving.outcomes import Outcome, RequestResult, outcome_counts
 from repro.serving.paged_cache import PagedCacheConfig, TRASH_PAGE
-from repro.serving.scheduler import ActiveSeq, Request, Scheduler
+from repro.serving.scheduler import (AdmissionImpossible, ActiveSeq, Request,
+                                     Scheduler)
 
 
 def _map_pool_leaves(caches, fn):
@@ -125,7 +129,12 @@ class ServingEngine:
                  num_splits: Optional[int] = None, autotune: bool = False,
                  share_prefix: bool = False,
                  prefill_chunk: Optional[int] = None,
-                 speculate_k: Optional[int] = None):
+                 speculate_k: Optional[int] = None,
+                 deadline_ms: Optional[float] = None,
+                 max_steps: Optional[int] = None,
+                 max_queue: Optional[int] = None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 watchdog_patience: int = 16):
         """lazy: admission policy (module docstring). reclaim: free
         fully-out-of-window pages each step — defaults to "whenever the arch
         has a sliding window"; pass False to pin pages for a model's whole
@@ -144,7 +153,22 @@ class ServingEngine:
         speculate_k: draft up to this many tokens per decode row with the
         prompt-lookup drafter and verify them in one model call (module
         docstring); None/0 turns speculation off.  Token-identical to plain
-        greedy decode under every admission/sharing/chunking mode."""
+        greedy decode under every admission/sharing/chunking mode.
+        deadline_ms / max_steps: default per-request deadlines — wall-clock
+        milliseconds and engine-iteration budget respectively; a request
+        exceeding either terminates with a ``TIMEOUT`` outcome and its
+        slot/pages/state reclaimed immediately (``submit`` takes per-request
+        overrides).  None disables that limit.
+        max_queue: bounded admission queue — submissions past this many
+        waiting requests shed (reject-newest, typed ``SHED`` outcome)
+        instead of queueing without bound.  None: unbounded (the batch-
+        replay default).
+        fault_plan: a seeded :class:`~repro.serving.faults.FaultPlan` whose
+        events this engine applies at host-layer seams each iteration (the
+        chaos harness); None serves faithfully.
+        watchdog_patience: iterations with zero progress (no tokens, no
+        prefill, no completions) the livelock watchdog tolerates before it
+        fails a stuck row with a diagnostic ``FAILED`` outcome."""
         assert cfg.causal, "serving needs an autoregressive arch"
         self.cfg = cfg
         self.pcfg = paged_cfg
@@ -214,6 +238,23 @@ class ServingEngine:
         self.drafted_tokens = 0                  # draft tokens sent to verify
         self.accepted_tokens = 0                 # drafts the model agreed with
         self._next_rid = 0
+        # -- resilience state (typed outcomes, deadlines, watchdog, faults) --
+        self.deadline_ms = deadline_ms
+        self.max_steps = max_steps
+        self.max_queue = max_queue
+        self.fault_plan = fault_plan
+        self.watchdog_patience = watchdog_patience
+        self.results: Dict[int, RequestResult] = {}   # rid → terminal record
+        self.watchdog_fires = 0
+        self.cancels = 0
+        self._iter = 0            # engine iterations — the fault-plan clock
+        self._steps = 0           # decode/verify steps (stats)
+        self._stall = 0           # consecutive zero-progress iterations
+        self._deadline_at: Dict[int, float] = {}   # rid → absolute wall time
+        self._step_limit: Dict[int, int] = {}      # rid → absolute iteration
+        self._nan_pending: List[int] = []          # fault args awaiting decode
+        self._fault_pocket: List[Tuple[int, List[int]]] = []
+        # (release-at iteration, pages) held by the "exhaust" fault
 
     def _autotuned_splits(self) -> int:
         """Pick the decode step's split count from the autotune cost model.
@@ -238,12 +279,27 @@ class ServingEngine:
 
     # -- request intake ----------------------------------------------------
     def submit(self, tokens, max_new_tokens: int, rid: Optional[int] = None,
-               eos_id: Optional[int] = None):
-        """Queue one request; validates it can ever be served."""
+               eos_id: Optional[int] = None,
+               deadline_ms: Optional[float] = None,
+               max_steps: Optional[int] = None):
+        """Queue one request; validates it can ever be served.
+
+        Malformed requests (empty prompt, duplicate rid, prompts wider than
+        a prefill row) still raise — those are caller bugs.  *Capacity*
+        rejections are load conditions, not bugs, so they shed instead: a
+        full admission queue (``max_queue``) or an impossible page footprint
+        (:class:`~repro.serving.scheduler.AdmissionImpossible`) records a
+        typed ``SHED`` outcome and returns the rid without queueing.
+        deadline_ms / max_steps override the engine-wide defaults for this
+        request."""
         tokens = np.asarray(tokens, np.int32)
         if rid is None:
             rid = self._next_rid
         self._next_rid = max(self._next_rid, rid + 1)
+        if rid in self.results:
+            raise ValueError(
+                f"request rid {rid} is already submitted — rids key the "
+                f"output dict, a duplicate would drop one generation")
         req = Request(rid=rid, tokens=tokens, max_new_tokens=max_new_tokens,
                       eos_id=self.eos_id if eos_id is None else eos_id)
         # prefill-row-width checks live here (the scheduler doesn't know the
@@ -264,8 +320,267 @@ class ServingEngine:
                 f"request {rid}: lazy serving needs prefill_len >= the "
                 f"prompt+generation budget ({req.budget_tokens}) so a "
                 f"preempted sequence can re-prefill")
-        self.scheduler.submit(req)
+        if self.max_queue is not None \
+                and len(self.scheduler.waiting) >= self.max_queue:
+            self._record_outcome(
+                rid, Outcome.SHED, [],
+                f"admission queue full ({self.max_queue} waiting) — "
+                f"reject-newest backpressure")
+            return rid
+        try:
+            self.scheduler.submit(req)
+        except AdmissionImpossible as e:
+            self._record_outcome(rid, Outcome.SHED, [], str(e))
+            return rid
+        dl = self.deadline_ms if deadline_ms is None else deadline_ms
+        if dl is not None:
+            self._deadline_at[rid] = time.perf_counter() + dl / 1e3
+        ms = self.max_steps if max_steps is None else max_steps
+        if ms is not None:
+            self._step_limit[rid] = self._iter + ms
         return rid
+
+    # -- resilience: outcomes, cancellation, deadlines, watchdog, faults ----
+    def _record_outcome(self, rid: int, outcome: Outcome, tokens,
+                        reason: str = ""):
+        """Write a request's terminal record and retire its deadlines.
+        Every path that ends a request funnels through here (or through
+        :meth:`_terminate_active`, which calls it) — the invariant the
+        ``engine-outcome-taxonomy`` lint rule and the chaos tests pin."""
+        self._deadline_at.pop(rid, None)
+        self._step_limit.pop(rid, None)
+        self.results[rid] = RequestResult.make(rid, outcome, tokens, reason)
+
+    def _terminate_active(self, seq: ActiveSeq, outcome: Outcome,
+                          reason: str = ""):
+        """End a running sequence early: free its slot, pages, and state row
+        immediately and record the typed outcome with its partial tokens."""
+        sched = self.scheduler
+        del sched.active[seq.slot]
+        sched.tables.release(seq.slot)
+        self._record_outcome(seq.request.rid, outcome, seq.all_generated,
+                             reason)
+
+    def _evict_finished(self) -> List[ActiveSeq]:
+        """Evict done sequences and record their ``COMPLETED`` outcomes."""
+        done = self.scheduler.evict_finished()
+        for seq in done:
+            self._record_outcome(seq.request.rid, Outcome.COMPLETED,
+                                 seq.all_generated)
+        return done
+
+    def cancel(self, rid: int, reason: str = "cancelled by client") -> bool:
+        """Cancel a request by rid — waiting or mid-flight.  A waiting
+        request leaves the queue; an active one releases its slot, pages,
+        and state row immediately.  Either way the request terminates with
+        a ``CANCELLED`` outcome keeping any tokens generated so far.
+        Returns False when no live request has that rid (already finished,
+        shed, or never submitted) — cancellation races are expected under
+        load and must not raise."""
+        req = self.scheduler.remove_waiting(rid)
+        if req is not None:
+            self._record_outcome(rid, Outcome.CANCELLED,
+                                 req.generated_prefix, reason)
+            self.cancels += 1
+            return True
+        for seq in list(self.scheduler.active.values()):
+            if seq.request.rid == rid:
+                self._terminate_active(seq, Outcome.CANCELLED, reason)
+                self.cancels += 1
+                return True
+        return False
+
+    def _check_deadlines(self):
+        """Expire requests past their wall-clock or engine-step budget:
+        waiting ones leave the queue, active ones release everything they
+        hold — both with a ``TIMEOUT`` outcome naming the budget that fired."""
+        sched = self.scheduler
+        now = time.perf_counter()
+        expired: Dict[int, str] = {}
+        for rid, t in self._deadline_at.items():
+            if now >= t:
+                expired[rid] = "wall-clock deadline expired"
+        for rid, limit in self._step_limit.items():
+            if self._iter >= limit:
+                expired.setdefault(
+                    rid, f"engine-step budget exhausted at iteration "
+                         f"{self._iter}")
+        for rid, why in expired.items():
+            req = sched.remove_waiting(rid)
+            if req is not None:
+                self._record_outcome(rid, Outcome.TIMEOUT,
+                                     req.generated_prefix, why)
+                continue
+            for seq in list(sched.active.values()):
+                if seq.request.rid == rid:
+                    self._terminate_active(seq, Outcome.TIMEOUT, why)
+                    break
+
+    def _release_pocket(self):
+        """Return every page the "exhaust" fault pocketed to the allocator —
+        at scheduled expiry, before an injected crash, and at loop exit, so
+        pool conservation holds at every boundary the tests check."""
+        for _, pages in self._fault_pocket:
+            self.scheduler.tables.allocator.free(pages)
+        self._fault_pocket = []
+
+    def _storm_eligible(self, seq: ActiveSeq) -> bool:
+        """A preemption-storm victim must be re-prefillable: with neither
+        chunked prefill nor prefix sharing, the resumed prompt+generated
+        must still fit one prefill row (lazy admission already guarantees
+        that via its submit check; eager does not).  A row that already
+        reached its budget is never a victim — resuming a spent request
+        would re-prefill it into a one-token overshoot."""
+        if seq.done:
+            return False
+        if self.prefill_chunk or self.share_prefix:
+            return True
+        return (seq.request.prompt_len + len(seq.generated)) \
+            <= self.prefill_len
+
+    def _apply_faults(self):
+        """Apply this iteration's :class:`FaultPlan` events at the host
+        seams (module docstring of serving/faults.py).  The plan decides,
+        this method applies — nothing here touches the jitted steps."""
+        plan = self.fault_plan
+        sched = self.scheduler
+        alloc = sched.tables.allocator
+        due = [p for p in self._fault_pocket if p[0] <= self._iter]
+        if due:
+            self._fault_pocket = [p for p in self._fault_pocket
+                                  if p[0] > self._iter]
+            for _, pages in due:
+                alloc.free(pages)
+        if plan.crash_step is not None and self._iter == plan.crash_step:
+            self._release_pocket()
+            raise InjectedCrash(
+                f"injected crash at engine iteration {self._iter}")
+        for ev in plan.events_at(self._iter):
+            if ev.kind == "exhaust":
+                # pocket only the free list: evicting cached pages would
+                # destroy live prefix-index content, which real exhaustion
+                # (allocation pressure) is allowed to do but a *transient*
+                # fault that gives the pages back must not
+                n = alloc.num_free
+                pages = alloc.alloc(n) if n else None
+                if pages:
+                    self._fault_pocket.append(
+                        (self._iter + plan.pocket_hold, pages))
+            elif ev.kind == "storm":
+                victims = sorted(
+                    (s for s in sched.active.values()
+                     if self._storm_eligible(s)),
+                    key=lambda s: s.birth, reverse=True)[:1 + ev.arg % 4]
+                for v in victims:
+                    sched.preempt(v)
+            elif ev.kind == "poison":
+                pages = alloc.free_page_ids()
+                if pages:
+                    self._poison_pages(pages)
+                if self.has_state:
+                    slots = sched.tables.state.free_slot_ids()
+                    if slots:
+                        self._poison_state(slots)
+            elif ev.kind == "nan":
+                self._nan_pending.append(ev.arg)
+            elif ev.kind == "cancel":
+                live = sorted(
+                    {r.rid for r in sched.waiting}
+                    | {s.request.rid for s in sched.active.values()})
+                if live:
+                    self.cancel(live[ev.arg % len(live)],
+                                reason="fault-plan cancellation")
+
+    def _stuck_diagnostic(self) -> str:
+        """One-line pool/queue picture for watchdog and stuck diagnostics."""
+        alloc = self.scheduler.tables.allocator
+        return (f"free={alloc.num_free} cached={alloc.num_cached} "
+                f"allocated={alloc.num_allocated} "
+                f"usable={self.pcfg.usable_pages} "
+                f"waiting={len(self.scheduler.waiting)} "
+                f"active={len(self.scheduler.active)} "
+                f"pocketed={sum(len(p) for _, p in self._fault_pocket)}")
+
+    def _watchdog_fire(self):
+        """The livelock watchdog tripped: fail one stuck row — the oldest
+        active sequence (holding the most resources for the least progress)
+        or, with nothing active, the waiting head — with a diagnostic.
+        Every firing removes a request, so a wedged engine drains to
+        termination instead of hanging."""
+        self.watchdog_fires += 1
+        self._stall = 0
+        sched = self.scheduler
+        why = (f"livelock watchdog: no progress for "
+               f"{self.watchdog_patience} iterations ({self._stuck_diagnostic()})")
+        if sched.active:
+            victim = min(sched.active.values(), key=lambda s: s.birth)
+            self._terminate_active(victim, Outcome.FAILED, why)
+        elif sched.waiting:
+            req = sched.waiting.popleft()
+            self._record_outcome(req.rid, Outcome.FAILED,
+                                 req.generated_prefix, why)
+
+    # -- crash recovery: host-state snapshot / restore ----------------------
+    def snapshot(self) -> Dict[str, object]:
+        """Capture the full host serving state plus the device caches as
+        host arrays — everything needed to resume this engine's work on a
+        fresh engine of the same configuration (``restore`` + ``run()``
+        continues token-identically; tests/test_chaos.py pins it).  The
+        scheduler deep-copy carries block tables, allocator, prefix index,
+        and state cache in one consistent piece; wall-clock deadlines are
+        stored as *remaining* seconds so a pause between snapshot and
+        restore doesn't silently expire them.  Any fault pocket is released
+        first so pool conservation holds inside the snapshot."""
+        self._release_pocket()
+        now = time.perf_counter()
+        host = {
+            "scheduler": self.scheduler,
+            "results": self.results,
+            "util_samples": self.util_samples,
+            "pool_samples": self.pool_samples,
+            "prefill_tokens": self.prefill_tokens,
+            "drafted_tokens": self.drafted_tokens,
+            "accepted_tokens": self.accepted_tokens,
+            "next_rid": self._next_rid,
+            "iter": self._iter,
+            "steps": self._steps,
+            "stall": self._stall,
+            "watchdog_fires": self.watchdog_fires,
+            "cancels": self.cancels,
+            "step_limit": self._step_limit,
+            "deadline_left": {rid: t - now
+                              for rid, t in self._deadline_at.items()},
+            "nan_pending": self._nan_pending,
+        }
+        return {"host": copy.deepcopy(host),
+                "caches": tree_map(np.asarray, self.caches)}
+
+    def restore(self, snap: Dict[str, object]):
+        """Adopt a :meth:`snapshot`'s state (deep-copied — restoring twice
+        from one snapshot is safe).  The engine must be built with the same
+        model/pool configuration; a following ``run()`` resumes serving
+        exactly where the snapshot left off."""
+        host = copy.deepcopy(snap["host"])
+        now = time.perf_counter()
+        self.scheduler = host["scheduler"]
+        self.results = host["results"]
+        self.util_samples = host["util_samples"]
+        self.pool_samples = host["pool_samples"]
+        self.prefill_tokens = host["prefill_tokens"]
+        self.drafted_tokens = host["drafted_tokens"]
+        self.accepted_tokens = host["accepted_tokens"]
+        self._next_rid = host["next_rid"]
+        self._iter = host["iter"]
+        self._steps = host["steps"]
+        self._stall = host["stall"]
+        self.watchdog_fires = host["watchdog_fires"]
+        self.cancels = host["cancels"]
+        self._step_limit = host["step_limit"]
+        self._deadline_at = {rid: now + left
+                             for rid, left in host["deadline_left"].items()}
+        self._nan_pending = host["nan_pending"]
+        self._fault_pocket = []
+        self.caches = tree_map(jnp.asarray, snap["caches"])
 
     # -- one packed prefill wave -------------------------------------------
     def _pack_rows(self, seqs: List[ActiveSeq]) -> List[List[ActiveSeq]]:
@@ -398,12 +713,29 @@ class ServingEngine:
         self.prefill_tokens += used
         return used
 
+    def _inject_nan(self, logits: np.ndarray, slots: List[int]
+                    ) -> np.ndarray:
+        """Apply pending "nan" fault events: corrupt one consumed row's
+        logits per event (victim picked by the event arg over the sorted
+        consumed slots), exercising the health sentinel below.  Returns the
+        (copied, corrupted) logits — device-backed arrays are read-only."""
+        if self._nan_pending and slots:
+            logits = logits.copy()
+            for arg in self._nan_pending:
+                logits[sorted(slots)[arg % len(slots)]] = np.nan
+            self._nan_pending = []
+        return logits
+
     # -- one decode step over every active slot ----------------------------
-    def _decode(self):
+    def _decode(self) -> int:
         """One fixed-shape decode step over all max_batch slots.  Mid-prefill
         rows ride along masked — trash table, kv_len 0, token 0 — so their
         half-written pages are neither read nor advanced; their garbage
-        logits are ignored like any inactive slot's."""
+        logits are ignored like any inactive slot's.  Each consumed row's
+        logits pass a health sentinel first: a NaN/inf row is quarantined —
+        slot/pages/state freed, ``FAILED`` outcome — instead of emitting
+        garbage (its kv_len never advances, so the poisoned write is
+        unreachable).  Returns the number of tokens emitted."""
         sched = self.scheduler
         tables = sched.tables
         tok = np.zeros((self.pcfg.max_batch,), np.int32)
@@ -424,13 +756,29 @@ class ServingEngine:
             self.params, jnp.asarray(tok), self.caches,
             jnp.asarray(bt), jnp.asarray(kvl))
         logits = np.asarray(logits[:, :self.cfg.vocab_size])
+        logits = self._inject_nan(logits,
+                                  [s for s, q in sched.active.items()
+                                   if not q.prefilling])
+        finite = np.isfinite(logits).all(axis=-1)
+        emitted = 0
+        bad: List[ActiveSeq] = []
         for slot, seq in sched.active.items():
             if seq.prefilling:
                 continue
+            if not finite[slot]:
+                bad.append(seq)
+                continue
             tables.kv_len[slot] += 1
             seq.generated.append(int(logits[slot].argmax()))
+            emitted += 1
+        for seq in bad:
+            self._terminate_active(
+                seq, Outcome.FAILED,
+                f"health sentinel: non-finite decode logits (slot "
+                f"{seq.slot})")
+        return emitted
 
-    def _decode_spec(self):
+    def _decode_spec(self) -> int:
         """One fixed-shape [B, k+1] verify step over all max_batch slots.
 
         Each non-prefilling row carries its current token plus up to ``k``
@@ -478,8 +826,19 @@ class ServingEngine:
             jnp.asarray(dest), jnp.asarray(ttab), jnp.asarray(kvl),
             self.caches)
         logits = np.asarray(logits[:, :, :self.cfg.vocab_size])
+        logits = self._inject_nan(logits, list(drafts))
+        n_out = 0
         for slot, draft in drafts.items():
             seq = sched.active[slot]
+            if not np.isfinite(logits[slot, :len(draft) + 1]).all():
+                # health sentinel — same quarantine as plain decode; only
+                # the row's live verify positions are checked (masked tail
+                # positions legitimately carry garbage)
+                self._terminate_active(
+                    seq, Outcome.FAILED,
+                    f"health sentinel: non-finite verify logits (slot "
+                    f"{slot})")
+                continue
             greedy = logits[slot, :len(draft) + 1].argmax(axis=-1)
             accepted, emitted = longest_accept(draft, greedy)
             self.accepted_tokens += accepted
@@ -488,6 +847,8 @@ class ServingEngine:
                 emitted = emitted[:emitted.index(eos) + 1]
             seq.generated.extend(emitted)
             tables.kv_len[slot] += len(emitted)
+            n_out += len(emitted)
+        return n_out
 
     def _apply_cow(self):
         """Apply queued copy-on-write page copies to every layer's pools —
@@ -547,68 +908,109 @@ class ServingEngine:
             self._poison_state(released)
 
     # -- the serving loop ---------------------------------------------------
+    def _iteration(self):
+        """One engine iteration: evict → faults → deadlines → reclaim →
+        grow/COW → admit → prefill → decode/verify → watchdog.  Each call
+        either makes progress (tokens, prefill spans, completions) or moves
+        the engine strictly closer to a watchdog firing — which removes a
+        request — so ``run`` terminates for every reachable state.
+
+        Eviction runs *before* faults and deadlines: a row that reached its
+        budget last iteration has completed, and must record ``COMPLETED``
+        before a storm can preempt it (which would re-prefill a spent
+        request and overshoot its budget by one token) or a deadline can
+        mislabel it ``TIMEOUT``."""
+        sched = self.scheduler
+        done = self._evict_finished()
+        if self.fault_plan is not None:
+            self._apply_faults()
+        if self._deadline_at or self._step_limit:
+            self._check_deadlines()
+        if sched.idle:
+            return
+        if self.reclaim and sched.active:
+            freed = sched.reclaim(self.window)
+            if freed and self.poison_reclaimed:
+                self._poison_pages(freed)
+        self._drain_state_releases()
+        n_pre = sched.preemptions
+        if sched.active:
+            # running rows claim write pages first — the whole verify
+            # span at once under speculation (lookahead = k + 1)
+            sched.ensure_growth(self._lookahead)
+            self._apply_cow()
+        self._drain_state_releases()   # growth-pass preemptions
+        admitted = sched.admit()
+        if admitted:
+            # newly admitted rows may need a copy-on-write before their
+            # first prefill span (a shared partial-tail block, or the
+            # re-prefilled last token of a fully matched prompt)
+            sched.ensure_growth(self._lookahead)
+            self._apply_cow()
+        progressed = self._prefill_step()
+        if progressed:
+            done += self._evict_finished()  # max_new == 1 finishes at prefill
+        if sched.active:
+            # just-prefilled rows may sit exactly on a page boundary;
+            # this pass may preempt one of them (its prefill work
+            # survives in generated_prefix and resumes later)
+            sched.ensure_growth(self._lookahead)
+            self._apply_cow()
+        emitted = 0
+        if any(not seq.prefilling for seq in sched.active.values()):
+            u = sched.tables.utilization()
+            self.util_samples.append(u["utilization"])
+            self.pool_samples.append(u["pool_fraction"])
+            emitted = (self._decode_spec() if self.speculate_k
+                       else self._decode())
+            self._steps += 1
+        if emitted or progressed or done:
+            # tokens, prefill spans, or completions: real progress — an
+            # admitted wave may finish entirely at prefill (max_new == 1),
+            # a preemption wave empties the active set to retry next
+            # iteration, and a chunked-prefill step may advance prompts
+            # without decoding; all reset the watchdog
+            self._stall = 0
+            return
+        if sched.waiting and not sched.active and not admitted \
+                and sched.preemptions == n_pre:
+            # no admission, no prefill, no preemption, nothing decodable:
+            # the waiting head can never be served — fail it with a
+            # diagnostic and keep serving the rest (the pre-resilience
+            # engine raised here, taking the whole batch down)
+            req = sched.waiting.popleft()
+            self._record_outcome(
+                req.rid, Outcome.FAILED, req.generated_prefix,
+                "scheduler stuck: nothing active yet nothing admissible — "
+                + self._stuck_diagnostic())
+            return
+        self._stall += 1
+        if self._stall > self.watchdog_patience:
+            self._watchdog_fire()
+
     def run(self, requests: Optional[List[Tuple[np.ndarray, int]]] = None
-            ) -> Tuple[Dict[int, np.ndarray], Dict[str, float]]:
+            ) -> Tuple[Dict[int, np.ndarray], Dict[str, object]]:
         """Serve until the queue drains. requests: (prompt_tokens, max_new)
-        pairs to submit first. Returns ({rid: generated tokens}, stats)."""
+        pairs to submit first. Returns ({rid: generated tokens} for the
+        ``COMPLETED`` requests, stats — with every request's typed outcome
+        tallied under ``stats["outcomes"]`` and per-request records in
+        ``self.results``)."""
         for tokens, max_new in requests or []:
             self.submit(tokens, max_new)
         sched = self.scheduler
         t0 = time.perf_counter()
-        steps = 0
-        while not sched.idle:
-            sched.evict_finished()
-            if self.reclaim and sched.active:
-                freed = sched.reclaim(self.window)
-                if freed and self.poison_reclaimed:
-                    self._poison_pages(freed)
-            self._drain_state_releases()
-            n_pre = sched.preemptions
-            if sched.active:
-                # running rows claim write pages first — the whole verify
-                # span at once under speculation (lookahead = k + 1)
-                sched.ensure_growth(self._lookahead)
-                self._apply_cow()
-            self._drain_state_releases()   # growth-pass preemptions
-            admitted = sched.admit()
-            if admitted:
-                # newly admitted rows may need a copy-on-write before their
-                # first prefill span (a shared partial-tail block, or the
-                # re-prefilled last token of a fully matched prompt)
-                sched.ensure_growth(self._lookahead)
-                self._apply_cow()
-            progressed = self._prefill_step()
-            if progressed:
-                sched.evict_finished()     # max_new == 1 finishes at prefill
-            if sched.active:
-                # just-prefilled rows may sit exactly on a page boundary;
-                # this pass may preempt one of them (its prefill work
-                # survives in generated_prefix and resumes later)
-                sched.ensure_growth(self._lookahead)
-                self._apply_cow()
-            if any(not seq.prefilling for seq in sched.active.values()):
-                u = sched.tables.utilization()
-                self.util_samples.append(u["utilization"])
-                self.pool_samples.append(u["pool_fraction"])
-                if self.speculate_k:
-                    self._decode_spec()
-                else:
-                    self._decode()
-                steps += 1
-            elif sched.waiting and not admitted and not progressed \
-                    and sched.preemptions == n_pre:
-                # an admitted wave may finish entirely at prefill
-                # (max_new == 1), a preemption wave empties the active set
-                # to retry next iteration, and a chunked-prefill step may
-                # advance prompts without decoding; all are progress — only
-                # a step with no admission, no prefill progress, no
-                # preemption and nothing decodable is a real deadlock
-                raise RuntimeError(
-                    "scheduler stuck: nothing active yet nothing admissible "
-                    "— the page pool is too small for the waiting requests")
+        try:
+            while not sched.idle:
+                self._iteration()
+                self._iter += 1
+        finally:
+            # an injected crash (or any error) must not strand pocketed
+            # pages: conservation holds at every exit
+            self._release_pocket()
         wall = time.perf_counter() - t0
-        out = {seq.request.rid: np.asarray(seq.all_generated, np.int32)
-               for seq in sched.finished}
+        steps = self._steps
+        out = {rid: res.tokens for rid, res in sorted(self.results.items())
+               if res.outcome is Outcome.COMPLETED}
         n_tok = sum(len(g) for g in out.values())
         tables = sched.tables
         stats = {
@@ -633,5 +1035,8 @@ class ServingEngine:
             "accepted_tokens": float(self.accepted_tokens),
             "acceptance_rate": (self.accepted_tokens /
                                 max(self.drafted_tokens, 1)),
+            "watchdog_fires": float(self.watchdog_fires),
+            "cancels": float(self.cancels),
+            "outcomes": outcome_counts(self.results),
         }
         return out, stats

@@ -166,6 +166,14 @@ class PageAllocator:
         """Current refcount of a page (0 when free or cached)."""
         return self._refs.get(page, 0)
 
+    def free_page_ids(self) -> List[int]:
+        """Snapshot of the free list (content-dead, immediately allocatable).
+        Cached pages are *not* included — their device content is live in
+        the prefix index and must survive until eviction.  The chaos
+        harness's ``poison`` fault clobbers exactly these pages to prove
+        nothing ever reads freed storage."""
+        return list(self._free)
+
     def alloc(self, n: int) -> Optional[List[int]]:
         """Hand out ``n`` fresh pages at refcount 1, or return None (and
         leave the pool untouched) if free + cached can't cover it.  The free

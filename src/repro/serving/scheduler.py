@@ -44,6 +44,15 @@ import numpy as np
 from repro.serving.paged_cache import BlockTables, PagedCacheConfig
 
 
+class AdmissionImpossible(ValueError):
+    """A request whose worst-case footprint can never fit this pool.
+
+    Subclasses ``ValueError`` so callers treating capacity rejection as
+    malformed input keep working, while the engine can catch it
+    specifically and shed the request with a typed ``SHED`` outcome
+    instead of propagating an exception."""
+
+
 @dataclasses.dataclass
 class Request:
     """One serving request (or the resumed tail of a preempted one)."""
@@ -153,15 +162,49 @@ class Scheduler:
                 f"request rid {req.rid} is already submitted — rids key the "
                 f"output dict, a duplicate would drop one generation")
         if req.budget_tokens > self.cfg.max_seq_len:
-            raise ValueError(
+            raise AdmissionImpossible(
                 f"request {req.rid}: prompt+generation of {req.budget_tokens} "
                 f"tokens can never fit max_seq_len={self.cfg.max_seq_len}")
-        if self.cfg.pages_for(req.budget_tokens) > self.cfg.usable_pages:
-            raise ValueError(
+        if self.peak_pages(req) > self.cfg.usable_pages:
+            raise AdmissionImpossible(
                 f"request {req.rid} needs more pages than the pool holds "
-                f"({self.cfg.usable_pages} usable)")
+                f"({self.peak_pages(req)} > {self.cfg.usable_pages} usable)")
         self._rids.add(req.rid)
         self.waiting.append(req)
+
+    def peak_pages(self, req: Request) -> int:
+        """Worst-case simultaneous page footprint of a request on this
+        scheduler — the submit-time shedding bound.
+
+        The naive bound is ``pages_for(budget_tokens)``: every position the
+        lifetime writes gets a page.  Under a sliding window with lazy
+        admission (and neither prefix sharing nor chunked prefill, which
+        re-enable whole-prefix residency — see :meth:`_first_live_block`),
+        dead-on-arrival blocks go to trash at admission and reclamation
+        frees blocks as they slide out, so a row only ever holds its
+        O(window) live tail: ``pages_for(window)`` plus one straddle page
+        and one not-yet-reclaimed page.  Without this relaxation a long
+        request on a small windowed pool sheds at submit even though the
+        pool could serve it forever — and with the *old* token-count-only
+        check such a request was accepted and then spun in the admission
+        queue without ever fitting."""
+        full = self.cfg.pages_for(req.budget_tokens)
+        if self.lazy and self.window is not None \
+                and not self.share_prefix and not self.chunked:
+            return min(full, self.cfg.pages_for(self.window) + 2)
+        return full
+
+    def remove_waiting(self, rid: int) -> Optional[Request]:
+        """Pull a request out of the waiting queue by rid (cancellation,
+        deadline expiry, watchdog shedding).  Returns it, or None if no
+        waiting request has that rid.  The rid stays burned in the dup
+        guard — a terminated request must not be resubmittable under the
+        same key."""
+        for req in self.waiting:
+            if req.rid == rid:
+                self.waiting.remove(req)
+                return req
+        return None
 
     def evict_finished(self) -> List[ActiveSeq]:
         """Move done sequences to ``finished``, returning their pages."""

@@ -64,6 +64,12 @@ class StateCache:
         """Is this slot's state row live?"""
         return slot in self._occupied
 
+    def free_slot_ids(self) -> List[int]:
+        """Snapshot of the free slots (state rows that are dead).  The
+        chaos harness's ``poison`` fault clobbers exactly these rows to
+        prove released recurrent state is never read back."""
+        return sorted(self._free)
+
     def admit(self, slot: int):
         """Mark a slot's state row live.  Raises on a slot outside the
         capacity or already occupied (the double-admit that would silently

@@ -1,0 +1,432 @@
+"""Serving resilience + chaos harness: typed outcomes under injected faults.
+
+The PR 10 contract, pinned here:
+
+* every request the engine accepts terminates in exactly one typed outcome
+  (``COMPLETED | CANCELLED | TIMEOUT | SHED | FAILED``) — no hangs, no
+  silent disappearances, no engine-wide exceptions for one bad request;
+* pool and state-row conservation hold after every drained run, whatever
+  faults fired in between;
+* rows a fault did not touch generate tokens bit-identical to a fault-free
+  run (greedy decode is schedule-invariant per row);
+* the same ``FaultPlan`` seed replays bit-identically;
+* crash-at-step-N + host snapshot/restore resumes token-identically.
+
+The fuzz matrix crosses seeded fault plans with {attention, recurrent}
+configs × {eager, lazy, chunked prefill, speculation} — the same serving
+feature matrix the conformance zoo pins fault-free.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.serving import (AdmissionImpossible, FaultEvent, FaultPlan,
+                           InjectedCrash, Outcome, PagedCacheConfig, Request,
+                           Scheduler, ServingEngine, untyped_rids)
+
+
+def _cfg(arch="granite_3_2b"):
+    cfg = configs.smoke_config(arch)
+    kw = dict(dtype=jnp.float32, remat=False)
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(cfg.moe, capacity_factor=8.0)
+    return dataclasses.replace(cfg, **kw)
+
+
+def _params(cfg):
+    from repro.models import lm
+    params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return params
+
+
+def _reqs(cfg, lens=((12, 6), (7, 8), (9, 4), (10, 5))):
+    rs = np.random.RandomState(0)
+    return [(rs.randint(0, cfg.vocab_size, size=L).astype(np.int32), g)
+            for L, g in lens]
+
+
+def _pcfg():
+    return PagedCacheConfig(page_size=8, num_pages=11, max_batch=2,
+                            max_pages_per_seq=3)
+
+
+def _engine(cfg, params, pcfg=None, prefill_len=24, **kw):
+    return ServingEngine(cfg, params=params, paged_cfg=pcfg or _pcfg(),
+                         impl="xla", prefill_len=prefill_len, xla_chunk=16,
+                         **kw)
+
+
+def _check_drained(eng):
+    """Conservation after the queue drains: every page and state row home."""
+    alloc = eng.scheduler.tables.allocator
+    assert alloc.num_allocated == 0
+    assert alloc.num_free + alloc.num_cached == eng.pcfg.usable_pages
+    st = eng.scheduler.tables.state
+    assert st.num_occupied == 0 and st.num_free == st.capacity
+
+
+def _outcomes(eng):
+    return {rid: r.outcome for rid, r in eng.results.items()}
+
+
+# ---------------------------------------------------------------------------
+# outcome taxonomy on healthy runs
+# ---------------------------------------------------------------------------
+
+def test_plain_run_outcomes_all_completed():
+    cfg = _cfg()
+    params = _params(cfg)
+    reqs = _reqs(cfg)
+    eng = _engine(cfg, params)
+    out, stats = eng.run(reqs)
+    assert untyped_rids(range(len(reqs)), eng.results) == []
+    assert all(o is Outcome.COMPLETED for o in _outcomes(eng).values())
+    assert stats["outcomes"]["completed"] == len(reqs)
+    assert set(out) == set(range(len(reqs)))
+    for rid, res in eng.results.items():
+        assert np.array_equal(res.tokens, out[rid])
+    _check_drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# deadlines: wall-clock and engine-step budgets
+# ---------------------------------------------------------------------------
+
+def test_step_budget_timeout_partial_tokens():
+    cfg = _cfg()
+    params = _params(cfg)
+    reqs = _reqs(cfg, lens=((8, 12), (6, 12)))
+    eng = _engine(cfg, params, max_steps=3)
+    out, stats = eng.run(reqs)
+    assert out == {}                       # nobody reached a 12-token budget
+    assert all(o is Outcome.TIMEOUT for o in _outcomes(eng).values())
+    assert stats["outcomes"]["timeout"] == 2
+    # admitted at iter 0 (prefill token) + decodes at iters 1-2 → partial
+    toks = eng.results[0].tokens
+    assert 0 < len(toks) < 12
+    assert "budget" in eng.results[0].reason
+    _check_drained(eng)
+
+
+def test_zero_wallclock_deadline_times_out_everything():
+    cfg = _cfg()
+    params = _params(cfg)
+    reqs = _reqs(cfg)
+    eng = _engine(cfg, params, deadline_ms=0.0)
+    out, _ = eng.run(reqs)
+    assert out == {}
+    assert all(o is Outcome.TIMEOUT for o in _outcomes(eng).values())
+    assert all(len(r.tokens) == 0 for r in eng.results.values())
+    _check_drained(eng)
+
+
+def test_per_request_deadline_overrides_engine_default():
+    cfg = _cfg()
+    params = _params(cfg)
+    reqs = _reqs(cfg, lens=((8, 4), (6, 4)))
+    eng = _engine(cfg, params)          # no engine-wide deadline
+    eng.submit(reqs[0][0], reqs[0][1])
+    eng.submit(reqs[1][0], reqs[1][1], max_steps=2)
+    out, _ = eng.run()
+    assert _outcomes(eng)[0] is Outcome.COMPLETED
+    assert _outcomes(eng)[1] is Outcome.TIMEOUT
+    assert list(out) == [0]
+    _check_drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# cancellation: waiting and mid-flight
+# ---------------------------------------------------------------------------
+
+def test_cancel_waiting_request():
+    cfg = _cfg()
+    params = _params(cfg)
+    reqs = _reqs(cfg)
+    base, _ = _engine(cfg, params).run(reqs)
+    eng = _engine(cfg, params)
+    for p, g in reqs:
+        eng.submit(p, g)
+    assert eng.cancel(2)
+    assert not eng.cancel(2)               # already terminated: no-op
+    assert not eng.cancel(99)              # unknown rid: no-op, no raise
+    out, _ = eng.run()
+    assert _outcomes(eng)[2] is Outcome.CANCELLED
+    assert len(eng.results[2].tokens) == 0
+    for rid in (0, 1, 3):                  # survivors bit-identical
+        assert np.array_equal(out[rid], base[rid])
+    _check_drained(eng)
+
+
+def test_cancel_active_via_fault_plan():
+    cfg = _cfg()
+    params = _params(cfg)
+    reqs = _reqs(cfg)
+    base, _ = _engine(cfg, params).run(reqs)
+    # cancel the lowest live rid (0: admitted in the first wave) at step 2
+    plan = FaultPlan(seed=0, events=(FaultEvent(step=2, kind="cancel",
+                                                arg=0),))
+    eng = _engine(cfg, params, fault_plan=plan)
+    out, stats = eng.run(reqs)
+    assert _outcomes(eng)[0] is Outcome.CANCELLED
+    assert 0 < len(eng.results[0].tokens) < len(base[0])  # partial kept
+    assert stats["cancels"] == 1
+    for rid in out:
+        assert np.array_equal(out[rid], base[rid])
+    assert untyped_rids(range(len(reqs)), eng.results) == []
+    _check_drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# backpressure: bounded queue + impossible-footprint shedding
+# ---------------------------------------------------------------------------
+
+def test_bounded_queue_sheds_newest():
+    cfg = _cfg()
+    params = _params(cfg)
+    reqs = _reqs(cfg)
+    eng = _engine(cfg, params, max_queue=2)
+    rids = [eng.submit(p, g) for p, g in reqs]
+    assert rids == [0, 1, 2, 3]
+    out, stats = eng.run()
+    assert _outcomes(eng)[2] is Outcome.SHED
+    assert _outcomes(eng)[3] is Outcome.SHED
+    assert "queue full" in eng.results[3].reason
+    assert stats["outcomes"]["shed"] == 2
+    assert set(out) == {0, 1}
+    _check_drained(eng)
+
+
+def test_impossible_footprint_sheds_at_engine_submit():
+    cfg = _cfg()
+    params = _params(cfg)
+    eng = _engine(cfg, params)
+    # 3 pages/request pool (max_pages_per_seq=3): a 20+8 budget needs 4
+    rid = eng.submit(np.arange(20, dtype=np.int32) % cfg.vocab_size, 8,
+                     rid=7)
+    assert rid == 7
+    assert _outcomes(eng)[7] is Outcome.SHED
+    assert "pool" in eng.results[7].reason or \
+           "max_seq_len" in eng.results[7].reason
+    out, _ = eng.run(_reqs(cfg, lens=((8, 4),)))
+    assert set(out) == {8}                 # auto-rid continues past the shed
+    _check_drained(eng)
+
+
+def test_scheduler_footprint_raises_admission_impossible():
+    # budget fits max_seq_len (28 <= 32) but needs 4 pages > 2 usable
+    pcfg = PagedCacheConfig(page_size=8, num_pages=3, max_batch=1,
+                            max_pages_per_seq=4)
+    sched = Scheduler(pcfg)
+    with pytest.raises(AdmissionImpossible, match="pool"):
+        sched.submit(Request(rid=0, tokens=np.zeros(20, np.int32),
+                             max_new_tokens=8))
+    assert issubclass(AdmissionImpossible, ValueError)  # legacy pins hold
+
+
+def test_window_relaxes_footprint_for_lazy_sliding_window():
+    """The satellite-2 fix, capability direction: under lazy + sliding
+    window (recurrentgemma, window 32) a request whose *full* budget can
+    never sit in the pool at once is still admissible — only its O(window)
+    tail is ever resident (dead-on-arrival blocks + reclamation) — and it
+    must now be accepted at submit and served to completion, token-identical
+    to a big-pool run.  Pre-fix, the token-count check shed it."""
+    cfg = _cfg("recurrentgemma_2b")
+    assert cfg.attn_window == 32
+    params = _params(cfg)
+    rs = np.random.RandomState(1)
+    prompt = rs.randint(0, cfg.vocab_size, size=40).astype(np.int32)
+    small = PagedCacheConfig(page_size=8, num_pages=8, max_batch=1,
+                             max_pages_per_seq=8)
+    # budget 40+17=57 → pages_for=8 > 7 usable; window tail 4+2=6 fits
+    assert small.pages_for(57) > small.usable_pages
+    big = PagedCacheConfig(page_size=8, num_pages=12, max_batch=1,
+                           max_pages_per_seq=8)
+    out_b, _ = _engine(cfg, params, pcfg=big, prefill_len=64,
+                       lazy=True).run([(prompt, 17)])
+    eng = _engine(cfg, params, pcfg=small, prefill_len=64, lazy=True)
+    out_s, _ = eng.run([(prompt, 17)])
+    assert _outcomes(eng)[0] is Outcome.COMPLETED
+    assert np.array_equal(out_s[0], out_b[0])
+    _check_drained(eng)
+    # eager (full-footprint) still sheds it — the relaxation is window-only
+    sched = Scheduler(small)
+    with pytest.raises(AdmissionImpossible):
+        sched.submit(Request(rid=0, tokens=prompt, max_new_tokens=17))
+
+
+# ---------------------------------------------------------------------------
+# health sentinel: NaN logits quarantine the row, not the batch
+# ---------------------------------------------------------------------------
+
+def test_nan_sentinel_quarantines_only_victim():
+    cfg = _cfg()
+    params = _params(cfg)
+    reqs = _reqs(cfg)
+    base, _ = _engine(cfg, params).run(reqs)
+    plan = FaultPlan(seed=0, events=(FaultEvent(step=2, kind="nan", arg=0),))
+    eng = _engine(cfg, params, fault_plan=plan)
+    out, stats = eng.run(reqs)
+    # victim: lowest consumed slot at step 2 = slot 0 = rid 0 (no churn)
+    assert _outcomes(eng)[0] is Outcome.FAILED
+    assert "sentinel" in eng.results[0].reason
+    assert stats["outcomes"]["failed"] == 1
+    for rid in out:                        # batch-mates bit-identical
+        assert np.array_equal(out[rid], base[rid])
+    assert len(out) == len(reqs) - 1
+    assert untyped_rids(range(len(reqs)), eng.results) == []
+    _check_drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# livelock watchdog: wedged states drain instead of hanging/raising
+# ---------------------------------------------------------------------------
+
+def test_unservable_request_fails_typed_not_engine_wide():
+    """A request whose admission can never succeed (white-boxed past submit
+    validation) used to raise RuntimeError and take the whole batch down;
+    now it fails typed and its batch-mates complete."""
+    cfg = _cfg()
+    params = _params(cfg)
+    reqs = _reqs(cfg, lens=((8, 4), (6, 4)))
+    # 2 usable pages: normal budgets need 2, the white-boxed one needs 3
+    pcfg = PagedCacheConfig(page_size=8, num_pages=3, max_batch=2,
+                            max_pages_per_seq=3)
+    base, _ = _engine(cfg, params, pcfg=pcfg).run(reqs)
+    eng = _engine(cfg, params, pcfg=pcfg)
+    eng.scheduler.waiting.append(
+        Request(rid=99, tokens=np.zeros(20, np.int32), max_new_tokens=4))
+    out, _ = eng.run(reqs)
+    assert _outcomes(eng)[99] is Outcome.FAILED
+    assert "stuck" in eng.results[99].reason
+    for rid in (0, 1):
+        assert _outcomes(eng)[rid] is Outcome.COMPLETED
+        assert np.array_equal(out[rid], base[rid])
+    _check_drained(eng)
+
+
+def test_permanent_pool_exhaustion_drains_all_failed():
+    """An exhaust fault that never returns its pages: every request must
+    terminate typed (FAILED via the stuck path) — no hang, and the pocket
+    is surrendered at exit so conservation still holds."""
+    cfg = _cfg()
+    params = _params(cfg)
+    reqs = _reqs(cfg)
+    plan = FaultPlan(seed=0, events=(FaultEvent(step=0, kind="exhaust"),),
+                     pocket_hold=1 << 30)
+    eng = _engine(cfg, params, fault_plan=plan)
+    out, stats = eng.run(reqs)
+    assert out == {}
+    assert all(o is Outcome.FAILED for o in _outcomes(eng).values())
+    assert untyped_rids(range(len(reqs)), eng.results) == []
+    assert stats["outcomes"]["failed"] == len(reqs)
+    _check_drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# fault-plan determinism + crash/snapshot/restore
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_seed_replay_is_bit_identical():
+    a, b = FaultPlan(seed=5), FaultPlan(seed=5)
+    assert a.events == b.events and a.describe() == b.describe()
+    assert FaultPlan(seed=6).events != a.events
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan(kinds=("segfault",))
+
+
+def test_engine_replay_same_seed_same_everything():
+    cfg = _cfg()
+    params = _params(cfg)
+    reqs = _reqs(cfg)
+    runs = []
+    for _ in range(2):
+        eng = _engine(cfg, params, fault_plan=FaultPlan(seed=11, horizon=16))
+        out, _ = eng.run(reqs)
+        runs.append((_outcomes(eng), out))
+        _check_drained(eng)
+    assert runs[0][0] == runs[1][0]
+    assert set(runs[0][1]) == set(runs[1][1])
+    for rid in runs[0][1]:
+        assert np.array_equal(runs[0][1][rid], runs[1][1][rid])
+
+
+def test_crash_snapshot_restore_resumes_token_identical():
+    cfg = _cfg()
+    params = _params(cfg)
+    reqs = _reqs(cfg)
+    base, _ = _engine(cfg, params).run(reqs)
+    plan = FaultPlan(seed=0, events=(), crash_step=3)
+    eng = _engine(cfg, params, fault_plan=plan)
+    with pytest.raises(InjectedCrash):
+        eng.run(reqs)
+    snap = eng.snapshot()
+    alloc = eng.scheduler.tables.allocator   # crash leaked nothing
+    assert alloc.num_free + alloc.num_cached + alloc.num_allocated \
+        == eng.pcfg.usable_pages
+    eng2 = _engine(cfg, params)
+    eng2.restore(snap)
+    out, _ = eng2.run()
+    assert set(out) == set(base)
+    for rid in base:
+        assert np.array_equal(out[rid], base[rid]), \
+            f"rid {rid} diverged across crash/restore"
+    _check_drained(eng2)
+    # restoring the same snapshot again must work (snapshots are immutable)
+    eng3 = _engine(cfg, params)
+    eng3.restore(snap)
+    out3, _ = eng3.run()
+    assert all(np.array_equal(out3[rid], base[rid]) for rid in base)
+
+
+# ---------------------------------------------------------------------------
+# the chaos fuzz matrix: seeded plans × configs × serving modes
+# ---------------------------------------------------------------------------
+
+_MODES = {
+    "eager": {},
+    "lazy": {"lazy": True},
+    "chunked": {"prefill_chunk": 6},
+    "spec": {"speculate_k": 2},
+}
+_CELLS = ([("granite_3_2b", m) for m in ("eager", "lazy", "chunked", "spec")]
+          + [("falcon_mamba_7b", m) for m in ("eager", "lazy")])
+
+
+@pytest.mark.parametrize("arch,mode", _CELLS,
+                         ids=[f"{a}-{m}" for a, m in _CELLS])
+def test_chaos_fuzz_matrix(arch, mode):
+    """Seeded faults across the serving feature matrix: the run returns
+    (no hang — the watchdog bounds every wedge), every rid terminates
+    typed, conservation holds, and completed rows are bit-identical to the
+    fault-free run of the same mode."""
+    cfg = _cfg(arch)
+    params = _params(cfg)
+    reqs = _reqs(cfg)
+    kw = dict(_MODES[mode])
+    if mode == "lazy":
+        pcfg = PagedCacheConfig(page_size=4, num_pages=10, max_batch=2,
+                                max_pages_per_seq=8)
+        prefill_len = 32
+    else:
+        pcfg, prefill_len = _pcfg(), 24
+    eng0 = _engine(cfg, params, pcfg=pcfg, prefill_len=prefill_len, **kw)
+    base, _ = eng0.run(list(reqs))
+    _check_drained(eng0)
+    assert len(base) == len(reqs)
+
+    seed = 13 + len(mode) + len(arch)      # vary plans across cells
+    eng = _engine(cfg, params, pcfg=pcfg, prefill_len=prefill_len,
+                  fault_plan=FaultPlan(seed=seed, horizon=24), **kw)
+    out, stats = eng.run(list(reqs))
+    assert untyped_rids(range(len(reqs)), eng.results) == [], \
+        f"{arch}/{mode}: untyped outcomes"
+    assert sum(stats["outcomes"].values()) == len(reqs)
+    for rid, toks in out.items():
+        assert np.array_equal(toks, base[rid]), \
+            f"{arch}/{mode}: completed rid {rid} diverged under faults"
+    _check_drained(eng)

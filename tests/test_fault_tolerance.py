@@ -54,6 +54,45 @@ def test_atomic_commit_ignores_partial(tmp_path):
     assert ckpt.latest_step(str(tmp_path)) == 3
 
 
+def test_truncated_checkpoint_raises_corrupt(tmp_path):
+    """A truncated arrays.npz must fail the digest check with the typed
+    error, not explode inside numpy deserialization."""
+    tree = {"a": jnp.arange(64.0), "b": jnp.ones((8, 8))}
+    ckpt.save(str(tmp_path), 2, tree)
+    arrays = tmp_path / "step_00000002" / "arrays.npz"
+    blob = arrays.read_bytes()
+    arrays.write_bytes(blob[:len(blob) // 2])
+    with pytest.raises(ckpt.CorruptCheckpointError, match="integrity"):
+        ckpt.restore(str(tmp_path), 2, jax.tree.map(jnp.zeros_like, tree))
+
+
+def test_bitflip_checkpoint_raises_corrupt(tmp_path):
+    """A single flipped byte in the payload must be caught too."""
+    tree = {"w": jnp.ones((16,))}
+    ckpt.save(str(tmp_path), 1, tree)
+    arrays = tmp_path / "step_00000001" / "arrays.npz"
+    blob = bytearray(arrays.read_bytes())
+    blob[len(blob) // 2] ^= 0xFF
+    arrays.write_bytes(bytes(blob))
+    with pytest.raises(ckpt.CorruptCheckpointError):
+        ckpt.restore(str(tmp_path), 1, jax.tree.map(jnp.zeros_like, tree))
+
+
+def test_predigest_checkpoint_still_restores(tmp_path):
+    """Checkpoints written before the digest field existed (no "digest" key
+    in metadata.json) restore without complaint — integrity is opt-out for
+    legacy artifacts, never a migration break."""
+    import json
+    tree = {"w": jnp.full((4,), 2.0)}
+    ckpt.save(str(tmp_path), 5, tree)
+    meta_path = tmp_path / "step_00000005" / "metadata.json"
+    meta = json.loads(meta_path.read_text())
+    del meta["digest"]
+    meta_path.write_text(json.dumps(meta))
+    out = ckpt.restore(str(tmp_path), 5, jax.tree.map(jnp.zeros_like, tree))
+    assert max_err(out["w"], tree["w"]) == 0
+
+
 @pytest.mark.slow  # three 5-10 step training runs (~8s)
 def test_resume_determinism(tmp_path):
     """train(10) ≡ train(5) + restart + train(5..10), bit-for-bit."""

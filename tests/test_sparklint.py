@@ -418,6 +418,59 @@ def test_zoo_coverage_clean_when_every_config_named(tmp_path):
     assert rule_ids(tmp_path, files, rules=["config-zoo-coverage"]) == []
 
 
+# ---------------------------------------------------------------- rule 10
+
+OUTCOME_BAD = """
+    class Engine:
+        def drop_row(self, seq):
+            del self.scheduler.active[seq.slot]
+            self.scheduler.tables.release(seq.slot)
+            return True
+
+        def sweep(self):
+            return self.scheduler.evict_finished()
+"""
+
+OUTCOME_CLEAN = """
+    class Engine:
+        def _terminate(self, seq, outcome):
+            del self.scheduler.active[seq.slot]
+            self.scheduler.tables.release(seq.slot)
+            self._record_outcome(seq.request.rid, outcome, seq.generated)
+
+        def sweep(self):
+            done = self.scheduler.evict_finished()
+            for seq in done:
+                self._record_outcome(seq.request.rid, Outcome.COMPLETED,
+                                     seq.generated)
+            return done
+"""
+
+
+def test_outcome_rule_flags_unrecorded_removal(tmp_path):
+    fs = run(make_tree(tmp_path,
+                       {"src/repro/serving/engine.py": OUTCOME_BAD}),
+             rules=["engine-outcome-taxonomy"])
+    assert [f.rule for f in fs] == ["engine-outcome-taxonomy"] * 2
+    assert "drop_row" in fs[0].message and "sweep" in fs[1].message
+
+
+def test_outcome_rule_clean_when_recorded(tmp_path):
+    ids = rule_ids(tmp_path,
+                   {"src/repro/serving/engine.py": OUTCOME_CLEAN},
+                   rules=["engine-outcome-taxonomy"])
+    assert ids == []
+
+
+def test_outcome_rule_ignores_other_files(tmp_path):
+    # scheduler.py's own release/evict calls are the engine's *mechanism*,
+    # not its outcome bookkeeping — the rule scopes to engine.py only
+    ids = rule_ids(tmp_path,
+                   {"src/repro/serving/scheduler.py": OUTCOME_BAD},
+                   rules=["engine-outcome-taxonomy"])
+    assert ids == []
+
+
 # ------------------------------------------------------- suppressions
 
 SUPPRESSED = """

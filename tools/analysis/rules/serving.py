@@ -13,13 +13,15 @@ from __future__ import annotations
 import ast
 from typing import List
 
-from tools.analysis.core import Finding, rule
+from tools.analysis.core import Finding, enclosing_functions, rule
 
 #: the host-only modules (engine.py is the device boundary and is exempt)
 HOST_ONLY = ("src/repro/serving/scheduler.py",
              "src/repro/serving/paged_cache.py",
              "src/repro/serving/state_cache.py",
-             "src/repro/serving/drafter.py")
+             "src/repro/serving/drafter.py",
+             "src/repro/serving/outcomes.py",
+             "src/repro/serving/faults.py")
 
 BANNED_ROOTS = {"jax", "jaxlib"}
 
@@ -44,4 +46,53 @@ def host_layer_numpy_only(cache, sf) -> List[Finding]:
                     f"import of '{mod}' in the serving host layer — "
                     f"scheduler/paged_cache/drafter stay numpy/python "
                     f"(device work belongs in the jitted steps)"))
+    return out
+
+
+#: calls that remove an active sequence's resources in the engine; functions
+#: making them must also record a typed outcome (or funnel through a helper
+#: that does), else requests silently vanish from the books
+_REMOVAL_ATTRS = {"release", "evict_finished"}
+_OUTCOME_MARKERS = {"Outcome", "_record_outcome"}
+
+
+@rule("engine-outcome-taxonomy",
+      description="every engine code path that removes an active sequence "
+                  "records a typed request outcome",
+      paths=("src/repro/serving/engine.py",))
+def engine_outcome_taxonomy(cache, sf) -> List[Finding]:
+    """The PR 10 resilience contract: a request leaving the active set —
+    ``tables.release(slot)`` or ``scheduler.evict_finished()`` — must end in
+    exactly one typed outcome (``COMPLETED | CANCELLED | TIMEOUT | SHED |
+    FAILED``).  Enforced structurally: any engine function making one of
+    those removal calls must also reference ``Outcome`` or the
+    ``_record_outcome`` funnel.  A removal call in a function with neither
+    is a request that terminates untyped — the bug class where a cancel or
+    quarantine path frees the pages but leaves the rid unaccounted."""
+    out = []
+    owners = enclosing_functions(sf.tree)
+    # which functions reference an outcome marker anywhere in their body
+    marked = set()
+    for node in ast.walk(sf.tree):
+        name = None
+        if isinstance(node, ast.Name):
+            name = node.id
+        elif isinstance(node, ast.Attribute):
+            name = node.attr
+        if name in _OUTCOME_MARKERS and owners.get(node) is not None:
+            marked.add(owners[node])
+    for node in ast.walk(sf.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in _REMOVAL_ATTRS):
+            continue
+        fn = owners.get(node)
+        if fn is None or fn not in marked:
+            where = fn.name if fn is not None else "<module>"
+            out.append(Finding(
+                "engine-outcome-taxonomy", sf.rel, node.lineno,
+                f"'{node.func.attr}(...)' in '{where}' removes an active "
+                f"sequence without recording a typed outcome — route "
+                f"through _record_outcome/_terminate_active so the request "
+                f"terminates as COMPLETED/CANCELLED/TIMEOUT/SHED/FAILED"))
     return out
